@@ -1,0 +1,57 @@
+"""Paper Fig. 4: wall-clock under constrained bandwidth.
+
+We measure the REAL per-iteration wire bytes of each strategy on the async
+cluster (same accounting as the paper: upward message + downward model/diff)
+and model iteration time as
+
+    t_iter = t_compute + bytes / bandwidth
+
+with the paper's two settings (10 Gbps default, 1 Gbps constrained).  The
+paper reports 88 min (DGS) vs 506 min (ASGD) at 1 Gbps = 5.7x; the model
+below reproduces the same mechanism (dense down+up vs dual-way sparse) on a
+parameterizable model size."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, make_classification_problem, run_strategy
+
+GBPS = 1e9 / 8  # bytes per second per Gbps
+
+
+def run(quick: bool = False):
+    n_events = 150 if quick else 600
+    rows = []
+    params0, grad_fn, batch_fn, _ = make_classification_problem(seed=0)
+    n_params = sum(int(np.prod(np.asarray(v).shape))
+                   for v in params0.values())
+    measured = {}
+    for name, secondary in [("asgd", None), ("dgs", None),
+                            ("dgs", 0.01)]:
+        tag = name + ("+2nd" if secondary else "")
+        final, hist, dt = run_strategy(
+            name, params0, grad_fn, batch_fn, n_workers=8,
+            n_events=n_events, lr=0.08, density=0.01, momentum=0.7,
+            secondary_density=secondary, seed=4)
+        per_iter = (hist.up_bytes + hist.down_bytes) / n_events
+        measured[tag] = per_iter
+        rows.append(csv_row(f"fig4/bytes/{tag}", dt / n_events * 1e6,
+                            f"bytes_per_iter={per_iter:.0f}"))
+    # analytic scale-up: ResNet-18-sized model (11.7M params), fp32
+    scale = 11.7e6 / n_params
+    t_compute = 0.118  # s/iter on K80 (paper: 50 epochs/88min incl. comm)
+    for bw_gbps in (10.0, 1.0):
+        times = {}
+        for tag, per_iter in measured.items():
+            wire = per_iter * scale
+            times[tag] = t_compute + wire / (bw_gbps * GBPS)
+        speedup = times["asgd"] / times["dgs+2nd"]
+        rows.append(csv_row(
+            f"fig4/model_{bw_gbps:g}gbps", 0.0,
+            f"asgd_s={times['asgd']:.3f};dgs_s={times['dgs']:.3f};"
+            f"dgs2nd_s={times['dgs+2nd']:.3f};speedup={speedup:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(quick=True)))

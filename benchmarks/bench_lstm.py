@@ -1,0 +1,25 @@
+"""Paper Table II: LSTM on the sequence task — symbol error rate (the WER
+stand-in) for single-node SGD vs DGC-async vs DGS at 4 workers."""
+from __future__ import annotations
+
+from .common import csv_row, make_copy_problem, run_strategy
+
+
+def run(quick: bool = False):
+    n_events = 250 if quick else 1500
+    params0, grad_fn, batch_fn, error_rate = make_copy_problem(
+        seed=0, copy_len=4, delay=4, hidden=96)
+    rows = []
+    for name in ["msgd", "dgc_async", "dgs"]:
+        final, hist, dt = run_strategy(
+            name, params0, grad_fn, batch_fn, n_workers=1 if name == "msgd"
+            else 4, n_events=n_events, lr=0.3, density=0.05, momentum=0.7,
+            seed=3)
+        err = error_rate(final)
+        rows.append(csv_row(f"table2/{name}", dt / n_events * 1e6,
+                            f"err={err:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(quick=True)))

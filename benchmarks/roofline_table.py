@@ -1,0 +1,60 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--dir DIR]
+Prints a markdown table (and CSV rows for benchmarks.run)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load_rows(dirpath: str) -> list[dict]:
+    rows = []
+    if not os.path.isdir(dirpath):
+        return rows
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | collective ms |"
+           " dominant | useful-FLOPs | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        peak = r.get("peak_bytes_per_device")
+        peak_s = f"{peak/2**30:.2f}" if peak else "?"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {peak_s} |")
+    return "\n".join(lines)
+
+
+def csv_rows(rows: list[dict]) -> list[str]:
+    out = []
+    for r in rows:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        dom_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        out.append(f"{name},{dom_ms*1e3:.1f},"
+                   f"dominant={r['dominant']};"
+                   f"c={r['compute_s']*1e3:.2f}ms;"
+                   f"m={r['memory_s']*1e3:.2f}ms;"
+                   f"x={r['collective_s']*1e3:.2f}ms")
+    return out
+
+
+def run(quick: bool = False, dirpath: str = "experiments/dryrun"):
+    return csv_rows(load_rows(dirpath))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    print(markdown(load_rows(args.dir)))

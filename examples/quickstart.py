@@ -1,0 +1,67 @@
+"""Quickstart: DGS + SAMomentum on a simulated asynchronous PS cluster.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains a small MLP classifier with 8 asynchronous workers at 99% gradient
+sparsity and compares against dense ASGD: same accuracy, ~50x less upward
+communication.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import async_sim, make_strategy
+from repro.data.synthetic import ClassificationTask
+
+task = ClassificationTask(n_features=64, n_classes=10, batch_size=32,
+                          noise=0.8, seed=0)
+
+
+def init_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (64, 64)) * 0.18,
+        "b1": jnp.zeros((64,)),
+        "w2": jax.random.normal(k2, (64, 10)) * 0.18,
+        "b2": jnp.zeros((10,)),
+    }
+
+
+def apply(p, x):
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def grad_fn(p, batch):
+    x, y = batch
+
+    def loss(p):
+        lp = jax.nn.log_softmax(apply(p, x))
+        return -jnp.mean(lp[jnp.arange(x.shape[0]), y])
+
+    return jax.value_and_grad(loss)(p)
+
+
+def accuracy(p):
+    x, y = task.eval_set(1024)
+    return float(jnp.mean(jnp.argmax(apply(p, x), -1) == y))
+
+
+def main():
+    params0 = init_params(jax.random.PRNGKey(0))
+    schedule = async_sim.make_schedule(n_workers=8, n_events=600, seed=1,
+                                       hetero=0.8)
+    for name, kwargs in [
+        ("asgd", {}),
+        ("dgs", {"density": 0.01, "momentum": 0.7}),
+    ]:
+        trainer = async_sim.AsyncTrainer(
+            strategy=make_strategy(name, **kwargs),
+            grad_fn=grad_fn, n_workers=8, lr=0.1)
+        final, _, hist = trainer.run(
+            params0, schedule, lambda e, k: task.batch(e, worker=k))
+        print(f"{name:6s} acc={accuracy(final):.3f} "
+              f"up={hist.up_bytes/1e6:6.2f}MB down={hist.down_bytes/1e6:6.2f}MB "
+              f"mean_staleness={hist.staleness.mean():.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a reduced assigned-architecture LM on a host
+mesh with the DGS sparse gradient exchange — the mesh-native face of the
+paper (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/train_lm_mesh.py --arch mamba2-780m \
+        --steps 100 --mode allgather
+
+Runs a ~few-hundred-step training of the reduced config (2 layers,
+d_model 256) on an 8-device host mesh (4 data x 2 model), real data
+(markov token stream), real optimizer, checkpoints at the end.
+This is the deliverable-(b) "train ~100M model for a few hundred steps"
+driver at CPU scale; the same builder lowers the full configs on the
+production mesh in repro.launch.dryrun.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mode", default="allgather",
+                    choices=["dense", "allgather", "shardedps"])
+    ap.add_argument("--density", type=float, default=0.05)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--checkpoint", default="/tmp/repro_lm.npz")
+    args = ap.parse_args()
+
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_arch
+    from repro.configs.shapes import InputShape, input_specs
+    from repro.core.distributed import ExchangeConfig
+    from repro.data.synthetic import TokenStream
+    from repro.launch import mesh as mesh_lib
+    from repro.launch.steps import build_train_step, zeros_state
+    from repro.models import init_params
+
+    cfg = get_arch(args.arch).reduced()
+    mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
+    shape = InputShape("example", 128, 16, "train")
+    ex_cfg = ExchangeConfig(mode=args.mode, density=args.density,
+                            momentum=0.9)
+    bundle = build_train_step(cfg, mesh, ex_cfg, lr=args.lr,
+                              batch_specs_abstract=input_specs(cfg, shape),
+                              remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ex_state = zeros_state(bundle)
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=128,
+                         batch_size=16, seed=0)
+    print(f"training {cfg.name} on mesh {dict(mesh.shape)} "
+          f"mode={args.mode} density={args.density}")
+    with mesh:
+        step = bundle.jit()
+        for i in range(args.steps):
+            batch = stream.batch(i)
+            if cfg.frontend_tokens:
+                batch["frontend_embeds"] = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(1), i),
+                    (16, cfg.frontend_tokens, cfg.d_model), cfg.cdtype)
+            params, ex_state, loss = step(params, ex_state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"  step {i:4d} loss {float(loss):.4f}")
+    save_checkpoint(args.checkpoint, params, step=args.steps,
+                    extra={"arch": cfg.name, "mode": args.mode})
+    print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

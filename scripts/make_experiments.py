@@ -1,0 +1,76 @@
+"""Render the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json and experiments/perf/*.json.
+
+    PYTHONPATH=src python scripts/make_experiments.py > experiments/tables.md
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline_table import load_rows, markdown  # noqa: E402
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "?"
+    return f"{x/2**30:.2f} GiB"
+
+
+def dryrun_summary(rows):
+    lines = ["| arch | shape | mesh | compile OK | args/dev | temp/dev | "
+             "collectives |", "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        colls = r.get("collective_counts", {})
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(colls.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | yes "
+            f"| {fmt_bytes(r.get('argument_bytes'))} "
+            f"| {fmt_bytes(r.get('temp_bytes'))} | {cstr} |")
+    return "\n".join(lines)
+
+
+def perf_table(base_rows, perf_dir):
+    """Hillclimb comparisons keyed on (arch, shape)."""
+    perf = load_rows(perf_dir)
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in base_rows}
+    lines = ["| pair | variant | compute ms | memory ms | collective ms | "
+             "dominant | Δdominant vs baseline |",
+             "|---|---|---|---|---|---|---|"]
+    for fn in sorted(os.listdir(perf_dir)) if os.path.isdir(perf_dir) else []:
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(perf_dir, fn)) as f:
+            r = json.load(f)
+        b = base.get((r["arch"], r["shape"], r["mesh"]))
+        variant = fn.replace(".json", "").replace(
+            f"{r['arch']}_{r['shape']}_{r['mesh']}", "").strip("_") or \
+            "baseline"
+        if b:
+            dom = b["dominant"]
+            key = {"compute": "compute_s", "memory": "memory_s",
+                   "collective": "collective_s"}[dom]
+            delta = (r[key] - b[key]) / b[key] * 100
+            dstr = f"{delta:+.1f}% ({dom})"
+        else:
+            dstr = "?"
+        lines.append(
+            f"| {r['arch']} x {r['shape']} | {variant} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['dominant']} | {dstr} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_rows("experiments/dryrun")
+    print("## Generated: §Dry-run summary\n")
+    print(dryrun_summary(rows))
+    print("\n## Generated: §Roofline table\n")
+    print(markdown(rows))
+    print("\n## Generated: §Perf comparisons\n")
+    print(perf_table(rows, "experiments/perf"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Pytree checkpointing: flat-path .npz + json metadata, restore-in-place.
+
+Dependency-free (numpy only) and structure-validating on restore; suitable
+for the CPU validation runs and as the format the launcher writes.  Arrays
+are gathered to host before saving (on a real pod this would be a
+per-process sharded write; the format keeps one file per save to stay
+simple).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = jnp.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # numpy has no native bf16; store widened (restore casts back
+            # to the target structure's dtype)
+            arr = arr.astype(jnp.float32)
+        out[key] = np.asarray(arr)
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None
+                    = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, _ = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    meta = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (validates key set/shapes)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    arrays, _ = _flatten_with_paths(like)
+    missing = set(arrays) - set(npz.files)
+    extra = set(npz.files) - set(arrays)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint structure mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in pathk)
+        arr = npz[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, leaf.dtype))
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"

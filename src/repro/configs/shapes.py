@@ -1,0 +1,68 @@
+"""The four assigned input shapes and per-(arch, shape) input specs.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as mcfg
+from repro.models import init_caches
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # train | prefill | decode
+    long: bool = False  # long-context decode (sliding-window substitution)
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", long=True),
+}
+
+
+def input_specs(cfg: mcfg.ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for one (architecture, input shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.frontend_tokens:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), cfg.cdtype)
+        return specs
+    # decode: one new token against a seq_len cache
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, long_mode=shape.long))
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }
+
+
+def concrete_inputs(cfg: mcfg.ModelConfig, shape: InputShape, *, seed=0):
+    """Small-scale concrete inputs (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+        if cfg.frontend_tokens:
+            out["frontend_embeds"] = jax.random.normal(
+                key, (B, cfg.frontend_tokens, cfg.d_model), cfg.cdtype)
+        return out
+    return {
+        "token": jax.random.randint(key, (B, 1), 0, cfg.vocab_size),
+        "pos": jnp.int32(S // 2),
+        "caches": init_caches(cfg, B, S, long_mode=shape.long),
+    }

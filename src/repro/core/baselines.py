@@ -1,0 +1,223 @@
+"""Worker-side update strategies: DGS (ours) and the paper's baselines.
+
+Every strategy shares the model-difference transport of server.py (the paper
+ports GD and DGC onto the same transport to make them runnable async — §5:
+"We implemented an asynchronous version of Gradient Dropping and DGC by
+adding model difference based compression as in our DGS").
+
+A strategy owns only the *worker-side* state and the upward message:
+
+    init(params)                 -> state pytree
+    step(state, grads, lr)       -> (state', msg)
+
+msg is either a list[SparseLeaf] (sparsified strategies) or a list of flat
+dense arrays (ASGD).  The message always includes the learning rate (the
+server applies it verbatim: M <- M - decode(msg)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import samomentum
+from .sparsify import SparseLeaf, density_to_k, topk_select
+
+
+class StrategyState(NamedTuple):
+    inner: Any  # strategy-specific pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str = "base"
+    sparse: bool = False
+
+    def init(self, params) -> StrategyState:
+        raise NotImplementedError
+
+    def step(self, state: StrategyState, grads, lr: float):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ASGD(Strategy):
+    """Vanilla asynchronous SGD: dense eta*grad upward, dense diff downward."""
+
+    name: str = "asgd"
+    sparse: bool = False
+
+    def init(self, params):
+        return StrategyState(inner=())
+
+    def step(self, state, grads, lr):
+        msg = [lr * g.reshape(-1).astype(jnp.float32) for g in jax.tree.leaves(grads)]
+        return state, msg
+
+
+@dataclasses.dataclass(frozen=True)
+class GDAsync(Strategy):
+    """Gradient Dropping (Aji & Heafield 2017), async port.
+
+    Residual accumulation of raw (lr-scaled) gradients; top-k of the residual
+    is sent; the remainder stays local (Alg. 1).  No momentum correction —
+    this is the baseline whose convergence the paper shows degrading.
+    """
+
+    name: str = "gd_async"
+    sparse: bool = True
+    density: float = 0.01
+
+    def init(self, params):
+        resid = jax.tree.map(
+            lambda p: jnp.zeros((int(p.size),), jnp.float32), params
+        )
+        return StrategyState(inner=resid)
+
+    def step(self, state, grads, lr):
+        resid_leaves, treedef = jax.tree.flatten(state.inner)
+        g_leaves = jax.tree.leaves(grads)
+        msgs, new_resid = [], []
+        for r, g in zip(resid_leaves, g_leaves):
+            r = r + lr * g.reshape(-1).astype(jnp.float32)
+            k = density_to_k(int(r.shape[0]), self.density)
+            msg = topk_select(r, k)
+            msgs.append(msg)
+            new_resid.append(r.at[msg.indices].set(0.0))
+        return StrategyState(inner=jax.tree.unflatten(treedef, new_resid)), msgs
+
+
+class _DGCState(NamedTuple):
+    velocity: Any   # momentum-corrected velocity, per-leaf flat
+    residual: Any   # accumulated unsent velocity, per-leaf flat
+
+
+@dataclasses.dataclass(frozen=True)
+class DGCAsync(Strategy):
+    """Deep Gradient Compression (Lin et al. 2017), async port.
+
+    Momentum correction: velocity u = m*u + lr*g accumulates into a residual
+    r += u; top-k of r is sent; *both* u and r are zeroed on sent coordinates
+    (momentum factor masking).  Needs two buffers (contrast SAMomentum's one).
+    """
+
+    name: str = "dgc_async"
+    sparse: bool = True
+    density: float = 0.01
+    momentum: float = 0.7
+    clip_norm: float | None = None
+
+    def init(self, params):
+        z = jax.tree.map(lambda p: jnp.zeros((int(p.size),), jnp.float32), params)
+        return StrategyState(inner=_DGCState(velocity=z, residual=z))
+
+    def step(self, state, grads, lr):
+        u_leaves, treedef = jax.tree.flatten(state.inner.velocity)
+        r_leaves = jax.tree.leaves(state.inner.residual)
+        g_leaves = jax.tree.leaves(grads)
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in g_leaves)
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            g_leaves = [g * scale for g in g_leaves]
+        msgs, new_u, new_r = [], [], []
+        for u, r, g in zip(u_leaves, r_leaves, g_leaves):
+            u = self.momentum * u + lr * g.reshape(-1).astype(jnp.float32)
+            r = r + u
+            k = density_to_k(int(r.shape[0]), self.density)
+            msg = topk_select(r, k)
+            msgs.append(msg)
+            new_r.append(r.at[msg.indices].set(0.0))
+            new_u.append(u.at[msg.indices].set(0.0))  # momentum factor masking
+        return (
+            StrategyState(
+                inner=_DGCState(
+                    velocity=jax.tree.unflatten(treedef, new_u),
+                    residual=jax.tree.unflatten(treedef, new_r),
+                )
+            ),
+            msgs,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DGS(Strategy):
+    """Ours: SAMomentum worker (paper Algorithm 3). One buffer, no residual.
+
+    ``quantize`` composes wire quantization with the sparse message — the
+    paper's stated future work (TernGrad combination, §Conclusion):
+    "none" | "bf16" | "int8" | "tern".
+    """
+
+    name: str = "dgs"
+    sparse: bool = True
+    density: float = 0.01
+    momentum: float = 0.7
+    quantize: str = "none"
+
+    @property
+    def value_bits(self) -> int:
+        return {"none": 32, "bf16": 16, "int8": 8, "tern": 2}[self.quantize]
+
+    def init(self, params):
+        return StrategyState(inner=samomentum.init(params))
+
+    def step(self, state, grads, lr):
+        from .sparsify import quantize_msgs
+
+        msgs, new_sam = samomentum.tree_update(
+            state.inner,
+            grads,
+            momentum=self.momentum,
+            lr=lr,
+            density=self.density,
+        )
+        if self.quantize != "none":
+            msgs, _ = quantize_msgs(msgs, self.quantize)
+        return StrategyState(inner=new_sam), msgs
+
+
+@dataclasses.dataclass(frozen=True)
+class DGSPlain(Strategy):
+    """Paper Algorithm 1: DGS transport without SAMomentum (residual top-k).
+
+    Worker-side identical to GDAsync; kept as a distinct named strategy so
+    ablations (SAMomentum on/off) are explicit.
+    """
+
+    name: str = "dgs_plain"
+    sparse: bool = True
+    density: float = 0.01
+
+    def init(self, params):
+        return GDAsync(density=self.density).init(params)
+
+    def step(self, state, grads, lr):
+        return GDAsync(density=self.density).step(state, grads, lr)
+
+
+def msgd_step(params, velocity, grads, *, lr: float, momentum: float):
+    """Single-node momentum SGD (the paper's MSGD baseline), Eq. (7)."""
+    new_v = jax.tree.map(lambda u, g: momentum * u + lr * g, velocity, grads)
+    new_p = jax.tree.map(lambda p, u: p - u, params, new_v)
+    return new_p, new_v
+
+
+STRATEGIES = {
+    "asgd": ASGD,
+    "gd_async": GDAsync,
+    "dgc_async": DGCAsync,
+    "dgs": DGS,
+    "dgs_plain": DGSPlain,
+}
+
+
+def make_strategy(name: str, **kw) -> Strategy:
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; have {sorted(STRATEGIES)}")
+    return cls(**kw)

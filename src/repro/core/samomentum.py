@@ -1,0 +1,88 @@
+"""Sparsification-Aware Momentum (SAMomentum) — paper Eq. (11)/(12), Alg. 3.
+
+Per parameter tensor, each step:
+
+    u      <- m * u_prev + eta * grad          (velocity accumulation)
+    thr    <- k-th largest |u|                 (static-k form of "R% of |u|")
+    mask   <- |u| >  thr-equivalent top-k support
+    g_sent <- u . mask                         (shipped to the server, WITH lr)
+    u      <- where(mask, u, u / m)            (Alg.3 line 11:
+                                                u += (1/m - 1) * u . !mask)
+
+Sent coordinates keep their velocity (momentum survives the send); unsent
+coordinates are pre-divided by m so that next step's ``m * u`` decay cancels,
+which telescopes (Eq. 13) into
+
+    u_{c+T} = m * u_c + eta * sum_{i=1..T} grad_{c+i}
+
+i.e. vanilla momentum with the batch size adaptively enlarged T x per
+coordinate — the paper's equivalence theorem, property-tested in
+tests/test_samomentum.py.
+
+No residual buffer exists (contrast DGC): the velocity itself carries the
+unsent mass. This halves optimizer memory vs momentum-corrected DGC.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sparsify import SparseLeaf, density_to_k, topk_select
+
+
+class SAMomentumState(NamedTuple):
+    velocity: object  # pytree like params
+
+
+def init(params) -> SAMomentumState:
+    return SAMomentumState(velocity=jax.tree.map(jnp.zeros_like, params))
+
+
+def leaf_update(
+    u_prev: jax.Array,
+    grad: jax.Array,
+    *,
+    momentum: float,
+    lr: float,
+    k: int,
+):
+    """Single-tensor SAMomentum step. Returns (msg: SparseLeaf, u_new)."""
+    u = momentum * u_prev + lr * grad
+    flat = u.reshape(-1)
+    msg = topk_select(flat, k)
+    mask = jnp.zeros(flat.shape, dtype=bool).at[msg.indices].set(True)
+    # Alg.3 line 11:  u += (1/m - 1) * u .* !mask   <=>  unsent /= m
+    u_new = jnp.where(mask, flat, flat / momentum).reshape(u.shape)
+    return msg, u_new
+
+
+def leaf_update_dense(u_prev, grad, *, momentum, lr):
+    """Degenerate density=1 case: every coordinate is sent each step, so
+    SAMomentum is exactly heavy-ball momentum (paper Eq. 7/8)."""
+    u = momentum * u_prev + lr * grad
+    return u, u
+
+
+def tree_update(
+    state: SAMomentumState,
+    grads,
+    *,
+    momentum: float,
+    lr: float,
+    density: float,
+):
+    """Per-leaf SAMomentum over a gradient pytree.
+
+    Returns (msgs: list[SparseLeaf] in jax.tree.leaves order, new_state).
+    """
+    u_leaves, treedef = jax.tree.flatten(state.velocity)
+    g_leaves = jax.tree.leaves(grads)
+    msgs, new_u = [], []
+    for u_prev, g in zip(u_leaves, g_leaves):
+        k = density_to_k(int(u_prev.size), density)
+        msg, u = leaf_update(u_prev, g, momentum=momentum, lr=lr, k=k)
+        msgs.append(msg)
+        new_u.append(u)
+    return msgs, SAMomentumState(velocity=jax.tree.unflatten(treedef, new_u))

@@ -1,0 +1,65 @@
+"""Fully-jitted asynchronous PS simulation: one ``lax.scan`` over events.
+
+The python event loop in async_sim.py is flexible (per-event python
+callbacks, byte accounting); this runner trades that for speed — the entire
+schedule compiles into a single XLA program (worker states stacked on a
+leading axis, events dynamically indexed), ~10-50x faster for the
+paper-strength benchmark sweeps.  Bit-equivalent to the python loop
+(tests/test_scan_runner.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import server as ps
+from .baselines import Strategy
+
+
+def run_async_scan(
+    strategy: Strategy,
+    grad_fn,
+    params0,
+    schedule,
+    batches,
+    *,
+    n_workers: int,
+    lr: float,
+    secondary_density: float | None = None,
+):
+    """Run the whole schedule in one jitted scan.
+
+    schedule: (n_events,) int32 worker ids.
+    batches:  pytree stacked on a leading n_events axis.
+    Returns (final global model, per-event losses).
+    """
+    sstate0 = ps.init(params0, n_workers)
+    wp0 = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params0)
+    ws0 = jax.tree.map(
+        lambda s: jnp.broadcast_to(s[None], (n_workers,) + s.shape),
+        strategy.init(params0))
+
+    def event(carry, xs):
+        sstate, wp, ws = carry
+        k, batch = xs
+        params_k = jax.tree.map(lambda x: x[k], wp)
+        strat_k = jax.tree.map(lambda x: x[k], ws)
+        loss, grads = grad_fn(params_k, batch)
+        strat_k, msg = strategy.step(strat_k, grads, lr)
+        sstate = ps.receive(sstate, msg)
+        sstate, G = ps.send(sstate, k, secondary_density=secondary_density)
+        params_k = ps.apply_to_params(params_k, G)
+        wp = jax.tree.map(lambda x, v: x.at[k].set(v), wp, params_k)
+        ws = jax.tree.map(lambda x, v: x.at[k].set(v), ws, strat_k)
+        return (sstate, wp, ws), loss
+
+    @jax.jit
+    def run(sstate0, wp0, ws0, schedule, batches):
+        (sstate, _, _), losses = jax.lax.scan(
+            event, (sstate0, wp0, ws0),
+            (jnp.asarray(schedule, jnp.int32), batches))
+        return sstate, losses
+
+    sstate, losses = run(sstate0, wp0, ws0, schedule, batches)
+    return ps.global_model(params0, sstate), losses

@@ -1,0 +1,120 @@
+"""Model-difference-tracking parameter server (paper §4, Algorithm 2).
+
+The server never stores the global model. It stores
+
+* ``M``   — the accumulated update,  M_t = theta_t - theta_0   (Eq. 2)
+* ``v_k`` — per worker k, the accumulation of everything already shipped to
+            worker k.  Invariant (Eq. 4): after serving worker k at time t,
+            v_k == M_t (without secondary compression).
+
+Upward:   M <- M - decode(g_k)                      (Alg. 2 line 3; the worker
+          message already contains the learning rate, see samomentum.py)
+Downward: G_k <- M - v_k ;  v_k <- v_k + G_k        (Eq. 3/4)
+          with optional secondary compression        (Eq. 6a/6b):
+          G_k <- sparse(M - v_k) ; v_k <- v_k + G_k  (remainder implicitly
+          accumulates in (M - v_k) and ships once large enough)
+
+Everything is stored per-leaf as flat f32 vectors so the same code path
+serves every architecture's parameter pytree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .sparsify import (
+    SparseLeaf,
+    density_to_k,
+    sparse_accumulate,
+    topk_select,
+)
+
+
+class ServerState(NamedTuple):
+    M: tuple          # tuple of flat (size,) arrays, one per param leaf
+    v: tuple          # tuple of (n_workers, size) arrays
+    t: jax.Array      # scalar int32 update timestamp
+
+
+def init(params, n_workers: int) -> ServerState:
+    leaves = [l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(params)]
+    M = tuple(jnp.zeros_like(l) for l in leaves)
+    v = tuple(jnp.zeros((n_workers, l.shape[0]), l.dtype) for l in leaves)
+    return ServerState(M=M, v=v, t=jnp.zeros((), jnp.int32))
+
+
+def receive(state: ServerState, msg) -> ServerState:
+    """Apply one worker's (sparse or dense) update message to M."""
+    new_M = []
+    for M_leaf, m in zip(state.M, msg):
+        if isinstance(m, SparseLeaf):
+            new_M.append(M_leaf.at[m.indices].add(-m.values))
+        else:  # dense flat array (ASGD)
+            new_M.append(M_leaf - m)
+    return ServerState(M=tuple(new_M), v=state.v, t=state.t + 1)
+
+
+def send(
+    state: ServerState,
+    worker_id,
+    *,
+    secondary_density: float | None = None,
+):
+    """Produce the model-difference message G_k for ``worker_id``.
+
+    Returns (new_state, G) where G is a list of dense flat arrays (no
+    secondary compression — G is *implicitly* sparse, we account its true nnz
+    for communication metrics) or a list of SparseLeaf (secondary
+    compression, Alg. 2 lines 5-11).
+    """
+    new_v, G = [], []
+    for M_leaf, v_leaf in zip(state.M, state.v):
+        diff = M_leaf - v_leaf[worker_id]
+        if secondary_density is None:
+            G.append(diff)
+            new_v.append(v_leaf.at[worker_id].set(M_leaf))
+        else:
+            k = density_to_k(int(diff.shape[0]), secondary_density)
+            msg = topk_select(diff, k)
+            G.append(msg)
+            new_v.append(
+                v_leaf.at[worker_id].set(sparse_accumulate(v_leaf[worker_id], msg))
+            )
+    return ServerState(M=tuple(state.M), v=tuple(new_v), t=state.t), G
+
+
+def apply_to_params(params, G):
+    """Worker-side model update  theta <- theta + G  (Eq. 5)."""
+    leaves, treedef = jax.tree.flatten(params)
+    out = []
+    for p, g in zip(leaves, G):
+        if isinstance(g, SparseLeaf):
+            flat = p.reshape(-1)
+            flat = flat.at[g.indices].add(g.values.astype(p.dtype))
+            out.append(flat.reshape(p.shape))
+        else:
+            out.append((p.reshape(-1) + g.astype(p.dtype)).reshape(p.shape))
+    return jax.tree.unflatten(treedef, out)
+
+
+def global_model(params0, state: ServerState):
+    """theta_t = theta_0 + M_t (Eq. 2) — used by tests and evaluation."""
+    leaves, treedef = jax.tree.flatten(params0)
+    out = [
+        (p.reshape(-1) + M.astype(p.dtype)).reshape(p.shape)
+        for p, M in zip(leaves, state.M)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def message_nnz(G) -> int:
+    """True non-zero count of a downward message (comm accounting)."""
+    total = 0
+    for g in G:
+        if isinstance(g, SparseLeaf):
+            total += int(g.values.shape[0])
+        else:
+            total += int(jnp.sum(g != 0.0))
+    return total

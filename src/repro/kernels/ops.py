@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, reshaping,
+candidate combine).  These are what the rest of the framework calls.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .block_topk import BLOCK, GROUP, block_topk_2d
+from .samomentum_kernel import BLOCK_ROWS, LANE, samomentum_fused_2d
+
+
+def _pad_to(x, multiple):
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x, pad
+
+
+@partial(jax.jit, static_argnames=("momentum", "lr", "interpret"))
+def samomentum_fused(u, g, thr, *, momentum: float, lr: float,
+                     interpret: bool = True):
+    """Fused SAMomentum over an arbitrary-shape tensor.
+
+    Returns (sent_dense, u_new): sent_dense is the thresholded velocity in
+    dense layout (zeros where unsent); u_new the rescaled velocity.
+    """
+    shape = u.shape
+    flat_u, _ = _pad_to(u.reshape(-1), BLOCK_ROWS * LANE)
+    flat_g, _ = _pad_to(g.reshape(-1).astype(u.dtype), BLOCK_ROWS * LANE)
+    u2d = flat_u.reshape(-1, LANE)
+    g2d = flat_g.reshape(-1, LANE)
+    out, unew = samomentum_fused_2d(u2d, g2d, jnp.asarray(thr),
+                                    momentum=momentum, lr=lr,
+                                    interpret=interpret)
+    n = u.size
+    return (out.reshape(-1)[:n].reshape(shape),
+            unew.reshape(-1)[:n].reshape(shape))
+
+
+@partial(jax.jit, static_argnames=("r", "interpret"))
+def block_topk_candidates(x, *, r: int, interpret: bool = True):
+    """Per-block top-r winners of |x|.  Returns (vals, global_idx), each
+    (nb, r); padding elements (|x| = 0 at index >= x.size) may appear only
+    when a block is entirely padding."""
+    flat, _ = _pad_to(x.reshape(-1), BLOCK * GROUP)
+    x2d = flat.reshape(-1, BLOCK)
+    vals, idx = block_topk_2d(x2d, r=r, interpret=interpret)
+    gidx = idx + (jnp.arange(x2d.shape[0], dtype=jnp.int32) * BLOCK)[:, None]
+    return vals, gidx
+
+
+@partial(jax.jit, static_argnames=("k", "r", "interpret"))
+def hierarchical_topk(x, *, k: int, r: int | None = None,
+                      interpret: bool = True):
+    """Top-k |x| selection via block winners + candidate top-k.
+
+    Exact iff r >= k; production callers pass r << k for the approximate
+    (oversampled) mode.  Returns (values, indices) into flattened x.
+    """
+    if r is None:
+        r = k
+    r = min(r, BLOCK)
+    vals, gidx = block_topk_candidates(x, r=r, interpret=interpret)
+    cvals = vals.reshape(-1)
+    cidx = gidx.reshape(-1)
+    _, sel = jax.lax.top_k(jnp.abs(cvals), min(k, cvals.shape[0]))
+    return cvals[sel], cidx[sel]
+
+
+@partial(jax.jit, static_argnames=("cap", "interpret"))
+def scatter_apply(dense, indices, values, *, cap: int | None = None,
+                  interpret: bool = True):
+    """dense.at[indices].add(values) via the blocked Pallas kernel.
+
+    The wrapper buckets updates by dense block (sort + rank), pads each
+    bucket to ``cap`` and runs kernels/scatter_apply.py.  Duplicate indices
+    accumulate.  ``cap`` must upper-bound the densest block's update count
+    (defaults to k, always safe).
+    """
+    from .scatter_apply import BLOCK, scatter_apply_blocked
+    shape = dense.shape
+    flat, pad = _pad_to(dense.reshape(-1), BLOCK)
+    nb = flat.shape[0] // BLOCK
+    k = values.shape[0]
+    cap = min(k, cap) if cap else k
+    block_of = indices // BLOCK
+    order = jnp.argsort(block_of)
+    b_s = block_of[order]
+    i_s = indices[order]
+    v_s = values[order].astype(jnp.float32)
+    rank = jnp.arange(k, dtype=jnp.int32) - jnp.searchsorted(
+        b_s, b_s, side="left").astype(jnp.int32)
+    ok = rank < cap
+    slot = jnp.where(ok, b_s * cap + rank, nb * cap)
+    vals2d = jnp.zeros((nb * cap + 1,), jnp.float32).at[slot].add(
+        jnp.where(ok, v_s, 0.0))[:-1].reshape(nb, cap)
+    offs2d = jnp.full((nb * cap + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(ok, i_s % BLOCK, -1))[:-1].reshape(nb, cap)
+    # overflow beyond cap falls back to XLA scatter (exactness guard)
+    spill = jnp.zeros_like(flat).at[jnp.where(ok, flat.shape[0], i_s)].add(
+        jnp.where(ok, 0.0, v_s).astype(dense.dtype), mode="drop")
+    out = scatter_apply_blocked(flat.reshape(nb, BLOCK),
+                                vals2d, offs2d, interpret=interpret)
+    out = out.reshape(-1) + spill
+    n = dense.size
+    return out[:n].reshape(shape)

@@ -1,0 +1,56 @@
+"""Blocked sparse scatter-apply — Pallas TPU kernel.
+
+Applying a decoded sparse update (``dense.at[idx].add(vals)``) is a random
+scatter: on TPU the efficient form is to pre-bucket the updates by parameter
+block (a cheap sort on the host side of the op), then stream each dense
+block through VMEM exactly once and apply its updates with on-chip dynamic
+stores.  One HBM round-trip for the parameter vector, no atomics (the TPU
+grid is sequential), contiguous DMA for both the parameters and the
+bucketed updates.
+
+Layout: params viewed as (n_blocks, BLOCK); updates pre-bucketed to
+(n_blocks, CAP) value/offset pairs padded with offset == -1.
+
+Semantics contract: kernels/ref.py::scatter_accumulate_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048      # dense elements per block (16 x 128 tile)
+
+
+def _kernel(vals_ref, offs_ref, dense_ref, out_ref, *, cap: int):
+    block = dense_ref[...]          # (1, BLOCK)
+    vals = vals_ref[...]            # (1, CAP)
+    offs = offs_ref[...]            # (1, CAP)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, block.shape, 1)
+
+    def body(j, acc):
+        off = offs[0, j]
+        val = vals[0, j]
+        hit = (lanes == off) & (off >= 0)
+        return acc + jnp.where(hit, val, 0.0).astype(acc.dtype)
+
+    out_ref[...] = jax.lax.fori_loop(0, cap, body, block)
+
+
+def scatter_apply_blocked(dense2d, vals2d, offs2d, *, interpret: bool = True):
+    """dense2d: (nb, BLOCK); vals2d/offs2d: (nb, CAP) bucketed updates
+    (offset local to the block, -1 = padding).  Returns updated dense2d."""
+    nb, cap = vals2d.shape
+    assert dense2d.shape == (nb, BLOCK), (dense2d.shape, nb)
+    spec_d = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    spec_u = pl.BlockSpec((1, cap), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, cap=cap),
+        grid=(nb,),
+        in_specs=[spec_u, spec_u, spec_d],
+        out_specs=spec_d,
+        out_shape=jax.ShapeDtypeStruct(dense2d.shape, dense2d.dtype),
+        interpret=interpret,
+    )(vals2d, offs2d, dense2d)

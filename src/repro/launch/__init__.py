@@ -1,0 +1,3 @@
+from . import mesh, roofline, sharding, steps
+
+__all__ = ["mesh", "roofline", "sharding", "steps"]

@@ -1,0 +1,221 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, prove memory fits, and extract roofline terms.
+
+MUST be run as a fresh process: the device-count override below has to land
+before jax initializes.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch chatglm3-6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+
+Results are written one JSON per combination so the roofline table
+(benchmarks/roofline_table.py) and EXPERIMENTS.md can be regenerated.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape       # noqa: E402
+from repro.core.distributed import ExchangeConfig                  # noqa: E402
+from repro.launch import mesh as mesh_lib                          # noqa: E402
+from repro.launch import roofline                                  # noqa: E402
+from repro.launch.steps import build_step                          # noqa: E402
+
+
+def _compile_step(cfg, mesh, shape, ex_cfg):
+    bundle = build_step(cfg, mesh, shape, ex_cfg=ex_cfg)
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.arg_specs)
+        return lowered.compile()
+
+
+def _extrapolate_costs(cfg, mesh, shape, ex_cfg):
+    """Correct for XLA cost_analysis counting scan bodies once: lower 1-unit
+    and 2-unit UNROLLED variants, fit cost(T) = out + T * body, extrapolate
+    to the full unit count.  Valid because per-unit structure is identical
+    and the out-of-scan work (embed/head/loss) is constant in T while the
+    exchange scales linearly (both fit the affine model)."""
+    import dataclasses as dc
+
+    from repro.launch.roofline import collective_stats, _WIRE_MULT
+    from repro.models.model import scan_unrolled
+
+    pattern, n_units = cfg.unit_pattern()
+    plen = len(pattern)
+    points = {}
+    for units in (1, 2):
+        sub = dc.replace(cfg, n_layers=units * plen)
+        with scan_unrolled():
+            compiled = _compile_step(sub, mesh, shape, ex_cfg)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        colls = collective_stats(compiled.as_text())
+        wire = sum(s["wire_bytes"] for s in colls.values())
+        points[units] = (float(cost.get("flops", 0.0)),
+                         float(cost.get("bytes accessed", 0.0)), wire)
+    f1, b1, w1 = points[1]
+    f2, b2, w2 = points[2]
+
+    def fit(v1, v2):
+        body = max(v2 - v1, 0.0)
+        out = max(v1 - body, 0.0)
+        return out + n_units * body
+
+    return fit(f1, f2), fit(b1, b2), fit(w1, w2)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            ex_mode: str = "allgather", density: float = 0.01,
+            out_dir: str | None = None, verbose: bool = True,
+            extrapolate: bool = True, wire_dtype: str = "float32",
+            bucket_factor: float = 2.0, ssd_chunk: int | None = None,
+            tag_suffix: str = "") -> dict:
+    import dataclasses as dc
+    cfg = get_arch(arch)
+    if ssd_chunk is not None and cfg.ssm is not None:
+        cfg = dc.replace(cfg, ssm=dc.replace(cfg.ssm, chunk=ssd_chunk))
+    if os.environ.get("REPRO_ACT_SHARD") == "1":
+        cfg = dc.replace(cfg, activation_sharding=True)
+    shape = get_shape(shape_name)
+    multi = mesh_kind == "multi"
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+    n_devices = 512 if multi else 256
+    if not multi:
+        # single-pod mesh uses the first 256 of the 512 host devices;
+        # REPRO_MESH_SHAPE=dxm relays them out (same chips, different
+        # data/model split — a §Perf sharding-scheme variant)
+        import numpy as np
+        d, m = map(int, os.environ.get("REPRO_MESH_SHAPE", "16x16")
+                   .split("x"))
+        assert d * m == 256, (d, m)
+        devs = np.asarray(jax.devices()[:256]).reshape(d, m)
+        mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    ex_cfg = ExchangeConfig(mode=ex_mode, density=density,
+                            wire_dtype=wire_dtype,
+                            bucket_factor=bucket_factor)
+    t0 = time.time()
+    bundle = build_step(cfg, mesh, shape, ex_cfg=ex_cfg)
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    report = roofline.analyze(compiled, arch=arch, shape=shape,
+                              mesh_name=mesh_kind, cfg=cfg,
+                              n_devices=n_devices)
+    if extrapolate:
+        flops, bytes_acc, wire = _extrapolate_costs(cfg, mesh, shape, ex_cfg)
+        report = roofline.RooflineReport(
+            arch=report.arch, shape=report.shape, mesh=report.mesh,
+            flops_per_device=flops, bytes_per_device=bytes_acc,
+            wire_bytes_per_device=wire,
+            collective_counts=report.collective_counts,
+            compute_s=flops / roofline.PEAK_FLOPS,
+            memory_s=bytes_acc / roofline.HBM_BW,
+            collective_s=wire / roofline.ICI_BW,
+            model_flops=report.model_flops, n_devices=report.n_devices,
+            peak_bytes_per_device=report.peak_bytes_per_device)
+    row = report.row()
+    row.update({
+        "ex_mode": ex_mode if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} "
+              f"({ex_mode if shape.kind == 'train' else shape.kind}): "
+              f"OK  compile={t_compile:.1f}s")
+        print(f"  memory_analysis: args="
+              f"{_gb(row['argument_bytes'])} temp={_gb(row['temp_bytes'])} "
+              f"out={_gb(row['output_bytes'])} (per device)")
+        print(f"  cost_analysis: flops/dev={row['hlo_flops_per_device']:.3e} "
+              f"bytes/dev={row['hlo_bytes_per_device']:.3e}")
+        print(f"  roofline: compute={row['compute_s']*1e3:.2f}ms "
+              f"memory={row['memory_s']*1e3:.2f}ms "
+              f"collective={row['collective_s']*1e3:.2f}ms "
+              f"-> dominant={row['dominant']}")
+        print(f"  collectives: {row['collective_counts']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_kind}"
+        if ex_mode != "allgather" and shape.kind == "train":
+            tag += f"_{ex_mode}"
+        tag += tag_suffix
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(row, f, indent=1, default=str)
+    return row
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}GiB" if x is not None else "?"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--ex-mode", default="allgather",
+                    choices=["dense", "allgather", "shardedps"])
+    ap.add_argument("--density", type=float, default=0.01)
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--bucket-factor", type=float, default=2.0)
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = sorted(SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                try:
+                    run_one(arch, shape, mesh_kind, ex_mode=args.ex_mode,
+                            density=args.density, out_dir=args.out,
+                            wire_dtype=args.wire_dtype,
+                            bucket_factor=args.bucket_factor,
+                            ssd_chunk=args.ssd_chunk,
+                            tag_suffix=args.tag_suffix)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mesh_kind, repr(e)))
+                    print(f"[dryrun] {arch} x {shape} x {mesh_kind}: "
+                          f"FAIL {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+The container is CPU-only; TPU v5e is the *target*.  We therefore derive the
+three roofline terms from the compiled (SPMD-partitioned, per-device) HLO:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective term = wire_bytes_per_device / ICI_link_bw      (50 GB/s)
+
+``cost_analysis()`` provides per-device FLOPs and bytes.  Collective bytes
+are NOT in cost_analysis: we parse the optimized HLO and sum collective-op
+output sizes, with op-specific wire multipliers (ring all-reduce moves ~2x
+the payload; all-gather/reduce-scatter move (n-1)/n ~ 1x; all-to-all 1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12         # bf16 per chip, TPU v5e
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link (prompt-specified constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# wire bytes moved per device, as a multiple of the op's output bytes
+_WIRE_MULT = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather ring phases
+    "all-gather": 1.0,          # receives (n-1)/n of output ~ 1
+    "reduce-scatter": 1.0,      # sends (n-1)/n of input ~ output*(n-1)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind {count, out_bytes, wire_bytes} from partitioned HLO."""
+    stats: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        s = stats.setdefault(kind, {"count": 0, "out_bytes": 0,
+                                    "wire_bytes": 0.0})
+        s["count"] += 1
+        s["out_bytes"] += b
+        s["wire_bytes"] += b * _WIRE_MULT[kind]
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collective_counts: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # 6*N(active)*D, global
+    n_devices: int
+    peak_bytes_per_device: float | None = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        per_dev_model = self.model_flops / max(1, self.n_devices)
+        return per_dev_model / self.flops_per_device if \
+            self.flops_per_device else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_device": self.flops_per_device,
+            "hlo_bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_counts": self.collective_counts,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE), D = tokens processed; decode
+    processes global_batch tokens per step; train includes backward (the 6x
+    already covers fwd+bwd; for inference steps we use 2*N*D)."""
+    n = cfg.param_count()
+    if cfg.moe is not None:
+        e = cfg.moe
+        total_expert = cfg.n_layers * e.n_experts
+        gates = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        expert_params = (cfg.n_layers * e.n_experts * gates
+                         * cfg.d_model * e.d_expert)
+        active = (cfg.n_layers * e.top_k * gates * cfg.d_model * e.d_expert)
+        n = n - expert_params + active
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, cfg,
+            n_devices: int) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    colls = collective_stats(text)
+    wire = sum(s["wire_bytes"] for s in colls.values())
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                    getattr(ma, "argument_size_in_bytes", 0) +
+                    getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        wire_bytes_per_device=wire,
+        collective_counts={k: v["count"] for k, v in colls.items()},
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=wire / ICI_BW,
+        model_flops=model_flops(cfg, shape),
+        n_devices=n_devices,
+        peak_bytes_per_device=mem,
+    )

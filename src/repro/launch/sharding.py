@@ -1,0 +1,168 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs per architecture.
+
+The "model" mesh axis carries tensor/expert parallelism (GSPMD-auto); the
+("pod", "data") axes carry data parallelism (manual inside the DGS exchange
+shard_map).  Rules are name+shape based so one function serves all 10
+architectures:
+
+* attn/MLP in-projections  (d, H*hd|ff)  -> P(None, "model")
+* out/down projections     (ff|H*hd, d)  -> P("model", None)
+* MoE expert tensors       (E, d, f)     -> P("model", None, None)  (EP)
+* embeddings               (V, d)        -> P("model", None)
+* vectors/norms            (d,)          -> replicated
+* stacked unit params get a leading None.
+
+``shard_axis_hints`` returns, per parameter leaf, the index of the dimension
+sharded over "model" (or None).  The DGS mesh exchange uses it to run top-k
+along *unsharded* dimensions only, so sparsification never forces a gather
+of the gradient across the model axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# names of projection params whose LAST dim shards over model
+_COL_SHARDED = {"wq", "wk", "wv", "up", "gate", "wq_b", "wkv_b", "in_proj"}
+# names whose FIRST dim shards over model
+_ROW_SHARDED = {"wo", "down", "out_proj"}
+
+
+def _leaf_rule(path_keys: tuple[str, ...], shape: tuple[int, ...],
+               model_size: int, n_kv_heads: int = 0) -> P:
+    """PartitionSpec for one (possibly unit-stacked) parameter leaf."""
+    names = [k for k in path_keys]
+    stacked = names and names[0] == "units"
+
+    def wrap(spec_dims):
+        if stacked:
+            return P(*([None] + spec_dims))
+        return P(*spec_dims)
+
+    core = shape[1:] if stacked else shape
+    nd = len(core)
+    owner = None
+    for n in reversed(names):
+        if n in ("w", "b", "scale", "bias", "table", "conv_w", "conv_b",
+                 "A_log", "dt_bias", "D"):
+            continue
+        owner = n
+        break
+    last = names[-1]
+
+    def ok(dim_idx):
+        return core[dim_idx] % model_size == 0 and core[dim_idx] >= model_size
+
+    # MoE expert tensors: (E, d, f) / (E, f, d): expert parallelism on dim 0
+    if "moe" in names and last in ("up", "gate", "down") and nd == 3:
+        if ok(0):
+            return wrap(["model", None, None])
+        return wrap([None] * nd)
+    if last == "table" and nd == 2:          # embedding (V, d)
+        if ok(0):
+            return wrap(["model", None])     # vocab-parallel
+        if ok(1):
+            return wrap([None, "model"])
+        return wrap([None, None])
+    if last in ("w", "b") and owner in ("wk", "wv"):
+        # K/V projections: shard only when whole KV heads land on each model
+        # shard.  If n_kv_heads < model_size the shards would cut through
+        # head_dim, and RoPE's strided slices on the fractured dim crash
+        # XLA's SPMD gather partitioner (observed on every kv<16 arch).
+        if n_kv_heads % model_size == 0 and ok(nd - 1):
+            return wrap([None] * (nd - 1) + ["model"])
+        return wrap([None] * nd)
+    if last == "w" and owner in _COL_SHARDED and nd == 2:
+        return wrap([None, "model"] if ok(1) else [None, None])
+    if last == "b" and owner in _COL_SHARDED and nd == 1:
+        return wrap(["model"] if ok(0) else [None])
+    if last == "w" and owner in _ROW_SHARDED and nd == 2:
+        return wrap(["model", None] if ok(0) else [None, None])
+    if last == "w" and owner == "lm_head" and nd == 2:  # (d, V)
+        return wrap([None, "model"] if ok(1) else [None, None])
+    if last == "conv_w" and nd == 2:         # (K, conv_dim)
+        return wrap([None, "model"] if ok(1) else [None, None])
+    if last in ("conv_b",) and nd == 1:
+        return wrap(["model"] if ok(0) else [None])
+    if last in ("A_log", "dt_bias", "D") and nd == 1:
+        return wrap(["model"] if ok(0) else [None])
+    if owner == "router":
+        return wrap([None] * nd)
+    # norms / small vectors / anything else: replicated
+    return wrap([None] * nd)
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return tuple(out)
+
+
+def param_specs(cfg: ModelConfig, params_shape, model_size: int):
+    """Pytree of PartitionSpec matching ``params_shape`` (shapes or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        _leaf_rule(_path_names(path), tuple(leaf.shape), model_size,
+                   n_kv_heads=cfg.n_kv_heads)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shard_axis_hints(cfg: ModelConfig, params_shape, model_size: int):
+    """Per-leaf index of the model-sharded dim (None if replicated)."""
+    specs = param_specs(cfg, params_shape, model_size)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    hints = []
+    for spec in flat_specs:
+        hint = None
+        for i, s in enumerate(spec):
+            if s == "model":
+                hint = i
+                break
+        hints.append(hint)
+    return hints
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, data_axes):
+    """Shard every batch input along its leading (batch) dim."""
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(*([data_axes] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, caches_shape, data_axes, model_size: int,
+                *, batch: int, n_data: int):
+    """Decode caches: (n_units, B, L, heads..., hd).
+
+    Shard batch over the data axes when divisible; otherwise (long_500k,
+    B=1) shard the cache length.  Shard the heads (or head_dim / state)
+    over "model" when divisible.
+    """
+    shard_batch = batch % n_data == 0 and batch >= n_data
+
+    def rule(leaf):
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            if shard_batch:
+                dims[1] = data_axes
+            elif leaf.ndim >= 3 and leaf.shape[2] % n_data == 0:
+                dims[2] = data_axes  # shard cache length / conv dim
+        # model axis: try trailing dims from the end (hd, heads, state)
+        for i in range(leaf.ndim - 1, 2, -1):
+            if leaf.shape[i] % model_size == 0 and leaf.shape[i] >= model_size:
+                dims[i] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree.map(rule, caches_shape)

@@ -1,0 +1,230 @@
+"""Step builders: jitted train/prefill/serve steps for (arch, mesh, mode).
+
+train_step topology (DESIGN.md §4):
+
+    jit (GSPMD over "model")
+     └─ shard_map  manual=("pod","data")  auto={"model"}
+         ├─ per-worker grads on the local batch shard
+         ├─ DGS exchange: SAMomentum -> top-k -> sparse collective
+         └─ pmean loss
+     └─ params <- params - updates        (back under GSPMD)
+
+serve/prefill steps are pure GSPMD (inference has no gradient exchange).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.distributed import (ExchangeConfig, ExchangeState, exchange)
+from repro.models import config as mcfg
+from repro.models import decode_step, loss_fn, prefill
+from repro.models.model import abstract_params
+
+from . import mesh as mesh_lib
+from . import sharding as shard_rules
+
+
+def _state_abstract(cfg: mcfg.ModelConfig, ex_cfg: ExchangeConfig,
+                    params_shape, n_workers: int, shard_axes=None):
+    """Abstract ExchangeState with the leading per-worker axis."""
+    from repro.core.distributed import shardedps_state_size
+
+    def vel(p):
+        return jax.ShapeDtypeStruct((n_workers,) + tuple(p.shape),
+                                    jnp.float32)
+
+    velocity = jax.tree.map(vel, params_shape)
+    leaves, treedef = jax.tree.flatten(params_shape)
+    if shard_axes is None:
+        shard_axes = [None] * len(leaves)
+    if ex_cfg.mode == "shardedps":
+        shards = [
+            jax.ShapeDtypeStruct(
+                (n_workers,
+                 shardedps_state_size(tuple(l.shape), ax, n_workers)),
+                jnp.float32)
+            for l, ax in zip(leaves, shard_axes)
+        ]
+        m = jax.tree.unflatten(treedef, shards)
+        v = jax.tree.unflatten(treedef, shards)
+    else:
+        m = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_workers, 0), jnp.float32),
+            params_shape)
+        v = m
+    return ExchangeState(velocity=velocity, m_shard=m, v_shard=v)
+
+
+def init_exchange_state(params, ex_cfg: ExchangeConfig, n_workers: int,
+                        shard_axes=None):
+    """Concrete zero state (small-scale training)."""
+    abstract = _state_abstract(None, ex_cfg, params, n_workers, shard_axes)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abstract)
+
+
+def zeros_state(bundle: "StepBundle"):
+    """Concrete zero ExchangeState matching a train bundle's abstract spec."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        bundle.arg_specs[1])
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: object                    # callable to jit/lower
+    in_shardings: tuple
+    arg_specs: tuple              # abstract args for .lower()
+    donate_argnums: tuple = ()
+    out_shardings: object = None  # pins donated-state shardings across steps
+
+    def jit(self, **kw):
+        import jax as _jax
+        if self.out_shardings is not None:
+            kw.setdefault("out_shardings", self.out_shardings)
+        return _jax.jit(self.fn, in_shardings=self.in_shardings,
+                        donate_argnums=self.donate_argnums, **kw)
+
+
+def build_train_step(cfg: mcfg.ModelConfig, mesh, ex_cfg: ExchangeConfig,
+                     *, lr: float = 1e-2, batch_specs_abstract=None,
+                     remat: bool = True) -> StepBundle:
+    data_axes = mesh_lib.data_axis_names(mesh)
+    W = mesh_lib.n_data_workers(mesh)
+    msize = mesh_lib.model_axis_size(mesh)
+    params_shape = abstract_params(cfg)
+    pspecs = shard_rules.param_specs(cfg, params_shape, msize)
+    hints = shard_rules.shard_axis_hints(cfg, params_shape, msize)
+
+    def inner(params, ex_state, batch):
+        ex_state = jax.tree.map(lambda x: x[0], ex_state)  # (1,...) -> (...)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, remat=remat)[0])(params)
+        updates, ex_state = exchange(
+            ex_state, grads, cfg=ex_cfg, lr=lr, axis_names=data_axes,
+            n_workers=W, shard_axes=hints)
+        loss = jax.lax.pmean(loss, data_axes)
+        ex_state = jax.tree.map(lambda x: x[None], ex_state)
+        return loss, updates, ex_state
+
+    state_spec_manual = jax.tree.map(
+        lambda _: P(data_axes),
+        _state_abstract(cfg, ex_cfg, params_shape, W, hints))
+    batch_spec_manual = jax.tree.map(
+        lambda l: P(data_axes) if l.ndim else P(), batch_specs_abstract)
+
+    def train_step(params, ex_state, batch):
+        loss, updates, ex_state = jax.shard_map(
+            inner, mesh=mesh, axis_names=set(data_axes),
+            in_specs=(P(), state_spec_manual, batch_spec_manual),
+            out_specs=(P(), P(), state_spec_manual),
+            check_vma=False,
+        )(params, ex_state, batch)
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+            params, updates)
+        return params, ex_state, loss
+
+    param_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    vel_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*((data_axes,) + tuple(s)))), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    flat_sharding = NamedSharding(mesh, P(data_axes, None))
+    state_shardings = ExchangeState(
+        velocity=vel_shardings,
+        m_shard=jax.tree.map(lambda _: flat_sharding, params_shape),
+        v_shard=jax.tree.map(lambda _: flat_sharding, params_shape))
+    batch_shardings = jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, P(*((data_axes,) + (None,) * (l.ndim - 1))) if l.ndim
+            else P()),
+        batch_specs_abstract)
+    state_abstract = _state_abstract(cfg, ex_cfg, params_shape, W, hints)
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(param_shardings, state_shardings, batch_shardings),
+        arg_specs=(params_shape, state_abstract, batch_specs_abstract),
+        donate_argnums=(0, 1),
+        out_shardings=(param_shardings, state_shardings,
+                       NamedSharding(mesh, P())),
+    )
+
+
+def build_prefill_step(cfg: mcfg.ModelConfig, mesh, *, shape) -> StepBundle:
+    from repro.configs.shapes import input_specs
+    msize = mesh_lib.model_axis_size(mesh)
+    data_axes = mesh_lib.data_axis_names(mesh)
+    params_shape = abstract_params(cfg)
+    pspecs = shard_rules.param_specs(cfg, params_shape, msize)
+    specs = input_specs(cfg, shape)
+
+    def prefill_step(params, batch):
+        logits, caches, aux = prefill(
+            params, batch["tokens"], cfg,
+            frontend_embeds=batch.get("frontend_embeds"))
+        return logits, caches
+
+    param_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    batch_shardings = jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, P(*((data_axes,) + (None,) * (l.ndim - 1)))),
+        specs)
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(param_shardings, batch_shardings),
+        arg_specs=(params_shape, specs),
+    )
+
+
+def build_serve_step(cfg: mcfg.ModelConfig, mesh, *, shape) -> StepBundle:
+    from repro.configs.shapes import input_specs
+    msize = mesh_lib.model_axis_size(mesh)
+    data_axes = mesh_lib.data_axis_names(mesh)
+    n_data = mesh_lib.n_data_workers(mesh)
+    params_shape = abstract_params(cfg)
+    pspecs = shard_rules.param_specs(cfg, params_shape, msize)
+    specs = input_specs(cfg, shape)
+    long_mode = shape.long
+
+    def serve_step(params, caches, token, pos):
+        return decode_step(params, caches, token, pos, cfg,
+                           long_mode=long_mode)
+
+    param_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    cspecs = shard_rules.cache_specs(
+        cfg, specs["caches"], data_axes, msize,
+        batch=shape.global_batch, n_data=n_data)
+    cache_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    tok_sharding = NamedSharding(
+        mesh, P(data_axes, None)
+        if shape.global_batch % n_data == 0 else P())
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(param_shardings, cache_shardings, tok_sharding,
+                      NamedSharding(mesh, P())),
+        arg_specs=(params_shape, specs["caches"], specs["token"],
+                   specs["pos"]),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(cfg, mesh, shape, *, ex_cfg: ExchangeConfig | None = None,
+               lr: float = 1e-2) -> StepBundle:
+    """One entry point: pick the right step kind for the input shape."""
+    from repro.configs.shapes import input_specs
+    ex_cfg = ex_cfg or ExchangeConfig(mode="allgather")
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, ex_cfg, lr=lr,
+                                batch_specs_abstract=input_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape=shape)
+    return build_serve_step(cfg, mesh, shape=shape)

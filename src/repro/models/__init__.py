@@ -1,0 +1,11 @@
+from . import attention, config, layers, model, moe, multimodal, rope, ssm
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from .model import (abstract_params, decode_step, forward, init_caches,
+                    init_params, loss_fn, prefill)
+
+__all__ = [
+    "attention", "config", "layers", "model", "moe", "multimodal", "rope",
+    "ssm", "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig",
+    "abstract_params", "decode_step", "forward", "init_caches",
+    "init_params", "loss_fn", "prefill",
+]

@@ -1,0 +1,349 @@
+"""Attention blocks: GQA (full / sliding-window / local:global) and MLA.
+
+Conventions
+-----------
+* Training / prefill forward: ``(B, S, d_model)`` activations, query-block
+  *chunked* attention so the score matrix never materialises at more than
+  ``(chunk_q, S_kv)`` per head — required for 32k prefill at production batch.
+* Sliding-window layers slice K/V to the live window per query chunk, so
+  compute is O(S * window), not O(S^2).
+* Decode: one query token against a KV cache.  Full-attention layers keep a
+  linear cache of ``seq_len``; sliding-window layers keep a ring buffer of
+  ``window`` slots (this is what makes long_500k decodable for windowed
+  configs — DESIGN.md §4).
+* MLA (MiniCPM3/DeepSeek-style) caches the compressed latent ``c_kv`` and the
+  shared rope key only: cache bytes per token = kv_lora_rank + rope_dim,
+  ~18x smaller than GQA at the same d_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rope as rope_lib
+from .config import ModelConfig
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# =========================================================== GQA attention ==
+
+def gqa_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(k1, d, cfg.n_heads * hd, dtype=cfg.pdtype,
+                          bias=cfg.qkv_bias),
+        "wk": linear_init(k2, d, cfg.n_kv_heads * hd, dtype=cfg.pdtype,
+                          bias=cfg.qkv_bias),
+        "wv": linear_init(k3, d, cfg.n_kv_heads * hd, dtype=cfg.pdtype,
+                          bias=cfg.qkv_bias),
+        "wo": linear_init(k4, cfg.n_heads * hd, d, dtype=cfg.pdtype),
+    }
+
+
+def _apply_positions(cfg: ModelConfig, q, k, positions, *, layer_kind: str):
+    theta = cfg.rope_theta
+    if layer_kind == "attn_local" and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # (B,S) text-only -> degenerate 3-stream
+            positions = jnp.stack([positions] * 3, axis=0)
+        return rope_lib.mrope(q, k, positions, theta=theta,
+                              sections=_mrope_sections(cfg))
+    rd = int(cfg.hd * cfg.rotary_pct)
+    rd -= rd % 2
+    return rope_lib.standard_rope(q, k, positions, theta=theta,
+                                  rotary_dim=rd)
+
+
+def _mrope_sections(cfg: ModelConfig):
+    # pairs summing to hd/2 in 1:1.5:1.5 t/h/w split (qwen2-vl uses 16/24/24
+    # for hd=128)
+    half = cfg.hd // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def _chunked_scores_softmax(qc, k, v, mask):
+    """qc: (B,C,KH,G,Dh); k/v: (B,Skv,KH,Dh); mask: (B,C,Skv) or (C,Skv).
+
+    Inputs stay in the compute dtype (bf16) with f32 ACCUMULATION
+    (preferred_element_type) — casting the inputs to f32 would make every
+    attention cotangent f32 and double the dominant backward all-reduce
+    traffic (§Perf iteration 2).  Returns (B,C,KH,G,Dh) f32.
+    """
+    scale = qc.shape[-1] ** -0.5
+    s = jnp.einsum("bckgd,bskd->bckgs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bckgs,bskd->bckgd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def gqa_forward(params, x, positions, cfg: ModelConfig, *,
+                layer_kind: str = "attn", chunk_q: int = 512,
+                return_kv: bool = False):
+    """Training/prefill GQA attention. x: (B,S,d). Returns (B,S,d)
+    (and the layer's KVCache when ``return_kv``)."""
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KH
+    q = linear(params["wq"], x).reshape(B, S, H, hd)
+    k = linear(params["wk"], x).reshape(B, S, KH, hd)
+    v = linear(params["wv"], x).reshape(B, S, KH, hd)
+    q, k = _apply_positions(cfg, q, k, positions, layer_kind=layer_kind)
+    windowed = layer_kind == "attn_local" or cfg.attention == "sliding"
+    window = cfg.window if windowed else None
+
+    C = min(chunk_q, S)
+    while S % C:
+        C -= 1
+    n_chunks = S // C
+    qs = q.reshape(B, n_chunks, C, KH, G, hd)
+
+    kv_pos = jnp.arange(S)
+
+    def one_chunk(ci, qc):
+        q_pos = ci * C + jnp.arange(C)
+        if window is not None and window + C < S:
+            # slice K/V to [chunk_start - window, chunk_start + C)
+            kw = window + C
+            start = jnp.clip(ci * C - window, 0, S - kw)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kw, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kw, axis=1)
+            kp = start + jnp.arange(kw)
+        else:
+            ks, vs, kp = k, v, kv_pos
+        mask = kp[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kp[None, :] > q_pos[:, None] - window
+        return _chunked_scores_softmax(qc, ks, vs, mask)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), jnp.moveaxis(qs, 0, 1)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    out = linear(params["wo"], out)
+    if return_kv:
+        L = min(cfg.window, S) if windowed else S
+        kc, vc = k[:, S - L:], v[:, S - L:]
+        if windowed and L < S:
+            # ring alignment: entry for absolute pos p lives at slot p % L
+            shift = (S - L) % L
+            kc = jnp.roll(kc, shift, axis=1)
+            vc = jnp.roll(vc, shift, axis=1)
+        return out, KVCache(k=kc.astype(cfg.cdtype), v=vc.astype(cfg.cdtype))
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, L, KH, hd) — L = seq_len, or window (ring)
+    v: jax.Array
+
+
+def _is_windowed(cfg: ModelConfig, layer_kind: str, long_mode: bool) -> bool:
+    return (layer_kind == "attn_local" or cfg.attention == "sliding"
+            or (long_mode and cfg.long_context == "sliding_window"))
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                   layer_kind: str = "attn", long_mode: bool = False):
+    windowed = _is_windowed(cfg, layer_kind, long_mode)
+    L = min(cfg.window, seq_len) if windowed else seq_len
+    shape = (batch, L, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, cfg.cdtype),
+                   v=jnp.zeros(shape, cfg.cdtype))
+
+
+def gqa_decode(params, cache: KVCache, x, pos, cfg: ModelConfig, *,
+               layer_kind: str = "attn", long_mode: bool = False):
+    """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
+
+    Windowed layers use the cache as a ring buffer (L == window slots), so
+    cache memory is O(window) regardless of sequence length.
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KH
+    q = linear(params["wq"], x).reshape(B, 1, H, hd)
+    k = linear(params["wk"], x).reshape(B, 1, KH, hd)
+    v = linear(params["wv"], x).reshape(B, 1, KH, hd)
+    rpos = pos
+    if cfg.rope == "mrope":
+        from .multimodal import mrope_text_position
+        rpos = mrope_text_position(cfg, pos)
+    positions = jnp.full((B, 1), rpos, jnp.int32)
+    q, k = _apply_positions(cfg, q, k, positions, layer_kind=layer_kind)
+
+    L = cache.k.shape[1]
+    windowed = _is_windowed(cfg, layer_kind, long_mode)
+    slot = jnp.mod(pos, L) if windowed else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                             slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                             slot, axis=1)
+    idx = jnp.arange(L)
+    if windowed:
+        # slot i holds absolute position pos - ((slot - i) mod L)
+        age = jnp.mod(slot - idx, L)
+        valid = ((pos - age) >= 0) & (age < cfg.window)
+    else:
+        valid = idx <= pos
+    qg = q.reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x.dtype)
+    return linear(params["wo"], o), KVCache(k=ck, v=cv)
+
+
+# =========================================================== MLA attention ==
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": linear_init(ks[0], d, m.q_lora_rank, dtype=cfg.pdtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype=cfg.pdtype),
+        "wq_b": linear_init(ks[1], m.q_lora_rank, H * qd, dtype=cfg.pdtype),
+        "wkv_a": linear_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                             dtype=cfg.pdtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype=cfg.pdtype),
+        "wkv_b": linear_init(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim),
+                             dtype=cfg.pdtype),
+        "wo": linear_init(ks[4], H * m.v_head_dim, d, dtype=cfg.pdtype),
+    }
+
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = linear(params["wq_b"], rmsnorm(params["q_norm"],
+                                       linear(params["wq_a"], x)))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = linear(params["wkv_a"], x)
+    c_kv = rmsnorm(params["kv_norm"], kv_a[..., : m.kv_lora_rank])
+    k_rope = kv_a[..., m.kv_lora_rank:].reshape(B, S, 1, dr)
+    q_rope, k_rope = rope_lib.standard_rope(q_rope, k_rope, positions,
+                                            theta=cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(params, c_kv, cfg: ModelConfig):
+    m = cfg.mla
+    H = cfg.n_heads
+    dn, dv = m.qk_nope_head_dim, m.v_head_dim
+    kv = linear(params["wkv_b"], c_kv)
+    kv = kv.reshape(*c_kv.shape[:-1], H, dn + dv)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_forward(params, x, positions, cfg: ModelConfig, *, chunk_q: int = 512,
+                return_kv: bool = False, **_):
+    B, S, _ = x.shape
+    m = cfg.mla
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg)
+    k_nope, v = _mla_expand_kv(params, c_kv, cfg)   # (B,S,H,dn), (B,S,H,dv)
+    scale = (dn + dr) ** -0.5
+    C = min(chunk_q, S)
+    while S % C:
+        C -= 1
+    n_chunks = S // C
+
+    def one_chunk(ci, qn_c, qr_c):
+        q_pos = ci * C + jnp.arange(C)
+        s = (jnp.einsum("bchd,bshd->bchs", qn_c, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bchd,bsxd->bchs", qr_c,
+                          jnp.broadcast_to(k_rope, (B, S, 1, dr)),
+                          preferred_element_type=jnp.float32)) * scale
+        mask = jnp.arange(S)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bchs,bshd->bchd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    qn = jnp.moveaxis(q_nope.reshape(B, n_chunks, C, H, dn), 0, 1)
+    qr = jnp.moveaxis(q_rope.reshape(B, n_chunks, C, H, dr), 0, 1)
+    out = jax.lax.map(lambda a: one_chunk(*a), (jnp.arange(n_chunks), qn, qr))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H * dv).astype(x.dtype)
+    out = linear(params["wo"], out)
+    if return_kv:
+        return out, MLACache(c_kv=c_kv.astype(cfg.cdtype),
+                             k_rope=k_rope[:, :, 0].astype(cfg.cdtype))
+    return out
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, L, kv_lora_rank)
+    k_rope: jax.Array   # (B, L, rope_dim)
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, seq_len: int, **_):
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, seq_len, m.kv_lora_rank), cfg.cdtype),
+        k_rope=jnp.zeros((batch, seq_len, m.qk_rope_head_dim), cfg.cdtype),
+    )
+
+
+def mla_decode(params, cache: MLACache, x, pos, cfg: ModelConfig, **_):
+    B = x.shape[0]
+    m = cfg.mla
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg)
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), pos, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope[:, :, 0].astype(cache.k_rope.dtype), pos, axis=1)
+    L = cc.shape[1]
+    valid = jnp.arange(L) <= pos
+    scale = (dn + dr) ** -0.5
+    if m.absorb:
+        # Absorbed decode (§Perf): score = (q_nope @ Wkn^T) . c  + q_rope . kr
+        # Wkv_b: (rank, H*(dn+dv)) -> Wkn: (rank, H, dn), Wv: (rank, H, dv)
+        wkv = params["wkv_b"]["w"].reshape(m.kv_lora_rank, H, dn + dv)
+        wkn, wv = wkv[..., :dn], wkv[..., dn:]
+        q_abs = jnp.einsum("bohd,rhd->bohr", q_nope.astype(jnp.float32),
+                           wkn.astype(jnp.float32))  # (B,1,H,rank)
+        s = (jnp.einsum("bohr,blr->bhl", q_abs, cc.astype(jnp.float32))
+             + jnp.einsum("bohd,bld->bhl", q_rope.astype(jnp.float32),
+                          cr.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhl,blr->bhr", p, cc.astype(jnp.float32))
+        o = jnp.einsum("bhr,rhd->bhd", ctx, wv.astype(jnp.float32))
+    else:
+        k_nope, v = _mla_expand_kv(params, cc, cfg)  # (B,L,H,dn/dv)
+        s = (jnp.einsum("bohd,blhd->bhl", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+             + jnp.einsum("bohd,bld->bhl", q_rope[:, :, :, :].astype(
+                 jnp.float32), cr.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * dv).astype(x.dtype)
+    return linear(params["wo"], o), MLACache(c_kv=cc, k_rope=cr)

@@ -1,0 +1,110 @@
+"""Basic NN layers: norms, projections, gated MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays; every layer is an
+(init, apply) pair of pure functions so the whole model remains a pytree
+that DGS can sparsify leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- linear --
+
+def linear_init(key, d_in: int, d_out: int, *, dtype=jnp.float32,
+                bias: bool = False):
+    p = {"w": _normal(key, (d_in, d_out), d_in ** -0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    """Matmul in the activation dtype (params cast at use: bf16 compute
+    against f32 master weights, the standard mixed-precision recipe)."""
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------ norms --
+
+def rmsnorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, *, dtype=jnp.float32):
+    return (rmsnorm_init if kind == "rmsnorm" else layernorm_init)(d, dtype=dtype)
+
+
+def norm(kind: str, p, x):
+    return (rmsnorm if kind == "rmsnorm" else layernorm)(p, x)
+
+
+# ------------------------------------------------------------------- mlps --
+
+def mlp_init(key, d_model: int, d_ff: int, *, activation: str = "swiglu",
+             dtype=jnp.float32, bias: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(k1, d_model, d_ff, dtype=dtype, bias=bias),
+        "down": linear_init(k2, d_ff, d_model, dtype=dtype, bias=bias),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["gate"] = linear_init(k3, d_model, d_ff, dtype=dtype, bias=bias)
+    return p
+
+
+def mlp(p, x, *, activation: str = "swiglu"):
+    if activation == "swiglu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    elif activation == "geglu":
+        h = jax.nn.gelu(linear(p["gate"], x)) * linear(p["up"], x)
+    elif activation == "gelu":
+        h = jax.nn.gelu(linear(p["up"], x))
+    elif activation == "silu":
+        h = jax.nn.silu(linear(p["up"], x))
+    else:
+        raise ValueError(activation)
+    return linear(p["down"], h)
+
+
+# -------------------------------------------------------------- embedding --
+
+def embedding_init(key, vocab: int, d_model: int, *, dtype=jnp.float32):
+    # d^-0.5 keeps tied-head logits O(1)
+    return {"table": _normal(key, (vocab, d_model), d_model ** -0.5, dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied LM head: logits = x @ table.T (float32 for stable softmax)."""
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T

@@ -1,0 +1,404 @@
+"""Model assembly: decoder-only LM over heterogeneous block stacks.
+
+The layer list of every assigned architecture is expressed as a repeating
+``unit pattern`` (ModelConfig.unit_pattern): e.g. gemma3 is 8 units of
+[5x local attn, 1x global attn]; zamba2 is 9 units of [5x mamba, 1x mamba +
+shared-attention]; uniform stacks are L units of [block].  Parameters are
+stacked over units and the forward pass is one ``lax.scan`` — keeping the
+compiled HLO size O(pattern), not O(L), which is what makes compiling 94-layer
+configs on 512 host devices tractable (DESIGN.md §6).
+
+Three entry points per architecture x input shape:
+  train_forward / loss_fn  — training shapes
+  prefill                  — forward + KV/SSM cache construction
+  decode_step              — one token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import multimodal
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import embed, embedding_init, linear, linear_init, norm, norm_init, mlp, mlp_init, unembed
+
+# When True, unit scans are fully unrolled.  Used by the dry-run's
+# cost-extrapolation lowering: XLA's cost_analysis counts while-loop bodies
+# ONCE regardless of trip count, so roofline terms are measured on small
+# UNROLLED variants and extrapolated linearly in the unit count
+# (launch/dryrun.py).
+_SCAN_UNROLL = False
+
+
+class scan_unrolled:
+    """Context manager: fully unroll the per-unit scans while active."""
+
+    def __enter__(self):
+        global _SCAN_UNROLL
+        self._prev = _SCAN_UNROLL
+        _SCAN_UNROLL = True
+
+    def __exit__(self, *exc):
+        global _SCAN_UNROLL
+        _SCAN_UNROLL = self._prev
+
+
+def _scan(body, init, xs):
+    n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, unroll=n if _SCAN_UNROLL else 1)
+
+
+# ------------------------------------------------------------------- init --
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind.startswith("attn"):
+        use_mla = cfg.attention == "mla"
+        p = {
+            "norm1": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+            "attn": (attn.mla_init if use_mla else attn.gqa_init)(ks[0], cfg),
+            "norm2": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                activation=cfg.activation, dtype=cfg.pdtype)
+        return p
+    if kind in ("mamba", "mamba_attn"):
+        return {
+            "norm1": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+            "mamba": ssm_lib.mamba_init(ks[0], cfg),
+        }
+    raise ValueError(kind)
+
+
+def _shared_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "norm2": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, max(cfg.d_ff, 4 * cfg.d_model),
+                        activation=cfg.activation, dtype=cfg.pdtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    pattern, n_units = cfg.unit_pattern()
+    k_embed, k_units, k_shared, k_head = jax.random.split(key, 4)
+    params: dict = {
+        "embed": embedding_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                dtype=cfg.pdtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype=cfg.pdtype),
+    }
+    unit_keys = jax.random.split(k_units, n_units)
+
+    def one_unit(uk):
+        bks = jax.random.split(uk, len(pattern))
+        return {f"b{i}": _block_init(bks[i], cfg, kind)
+                for i, kind in enumerate(pattern)}
+
+    units = [one_unit(uk) for uk in unit_keys]
+    params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    if cfg.shared_attention and any(k == "mamba_attn" for k in pattern):
+        params["shared"] = _shared_block_init(k_shared, cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(k_head, cfg.d_model, cfg.vocab_size,
+                                        dtype=cfg.pdtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------- forward --
+
+def _apply_block(bp, h, positions, cfg: ModelConfig, kind: str, shared, *,
+                 want_cache: bool = False):
+    aux = {"load_balance": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    cache = None
+    if kind.startswith("attn"):
+        fwd = attn.mla_forward if cfg.attention == "mla" else attn.gqa_forward
+        out = fwd(bp["attn"], norm(cfg.norm, bp["norm1"], h), positions,
+                  cfg, layer_kind=kind, return_kv=want_cache)
+        if want_cache:
+            out, cache = out
+        h = h + out
+        hn = norm(cfg.norm, bp["norm2"], h)
+        if cfg.moe is not None:
+            out, aux = moe_lib.moe_forward(bp["moe"], hn, cfg)
+            h = h + out
+        else:
+            h = h + mlp(bp["mlp"], hn, activation=cfg.activation)
+        return h, aux, cache
+    # mamba (+ optional shared attention afterwards)
+    out = ssm_lib.mamba_forward(bp["mamba"], norm(cfg.norm, bp["norm1"], h),
+                                cfg, return_state=want_cache)
+    if want_cache:
+        out, ssm_cache = out
+        cache = {"ssm": ssm_cache}
+    h = h + out
+    if kind == "mamba_attn" and shared is not None:
+        pos2 = positions if positions.ndim == 2 else positions[0]
+        out = attn.gqa_forward(shared["attn"],
+                               norm(cfg.norm, shared["norm1"], h),
+                               pos2, cfg, layer_kind="attn",
+                               return_kv=want_cache)
+        if want_cache:
+            out, cache["shared"] = out
+        h = h + out
+        h = h + mlp(shared["mlp"], norm(cfg.norm, shared["norm2"], h),
+                    activation=cfg.activation)
+    return h, aux, cache
+
+
+def _positions_for(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.rope == "mrope":
+        return multimodal.mrope_positions(cfg, batch, seq_len)
+    return jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32)[None],
+                            (batch, seq_len))
+
+
+def _sinusoidal(d_model: int, positions):
+    """Absolute sinusoidal embeddings (musicgen-style decoders, rope='none').
+
+    positions: (B, S) -> (B, S, d_model)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _maybe_add_abs_pos(cfg: ModelConfig, h, positions):
+    if cfg.rope == "none" and cfg.arch_type not in ("ssm", "hybrid"):
+        p = positions if positions.ndim == 2 else positions[0]
+        h = h + _sinusoidal(cfg.d_model, p).astype(h.dtype)
+    return h
+
+
+def forward(params, tokens, cfg: ModelConfig, *, frontend_embeds=None,
+            want_cache: bool = False, remat: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V) float32, aux dict
+    (and stacked per-unit caches when ``want_cache``, for prefill).
+
+    ``remat=True`` checkpoints each unit (activation recomputation in the
+    backward pass) — required at production sequence lengths."""
+    pattern, n_units = cfg.unit_pattern()
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens).astype(cfg.cdtype)
+    h = multimodal.merge_frontend(cfg, h, frontend_embeds)
+    positions = _positions_for(cfg, B, S)
+    h = _maybe_add_abs_pos(cfg, h, positions)
+    shared = params.get("shared")
+
+    def unit_fn(carry, unit_params):
+        h, lb, rz = carry
+        caches = {}
+        for i, kind in enumerate(pattern):
+            h, aux, cache = _apply_block(unit_params[f"b{i}"], h, positions,
+                                         cfg, kind, shared,
+                                         want_cache=want_cache)
+            if cfg.activation_sharding:
+                from jax.sharding import PartitionSpec as _P
+                h = jax.lax.with_sharding_constraint(
+                    h, _P(None, None, "model"))
+            lb = lb + aux["load_balance"]
+            rz = rz + aux["router_z"]
+            if want_cache:
+                caches[f"b{i}"] = cache
+        return (h, lb, rz), caches if want_cache else None
+
+    body = jax.checkpoint(unit_fn) if remat else unit_fn
+    (h, lb, rz), caches = _scan(
+        body,
+        (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        params["units"],
+    )
+    h = norm(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = linear(params["lm_head"], h).astype(jnp.float32)
+    # NOTE (§Perf, refuted hypothesis): constraining the tied-head logits to
+    # vocab-sharded (reduce-scatter instead of the 12.5 GiB f32 all-reduce)
+    # was measured and made the collective term WORSE (+3%): the backward of
+    # the constraint re-gathers the same bytes. Kept unconstrained.
+    aux = {"load_balance": lb / cfg.n_layers, "router_z": rz / cfg.n_layers}
+    if want_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    """batch: {"tokens": (B,S), optional "frontend_embeds"}.
+
+    Next-token cross entropy (+ MoE aux losses). Returns (loss, metrics).
+    """
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens, cfg,
+                          frontend_embeds=batch.get("frontend_embeds"),
+                          remat=remat)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    # one-hot formulation (not take_along_axis): partitions cleanly when the
+    # vocab dim is sharded over "model" — the gather form trips XLA's SPMD
+    # gather partitioner at scale
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt_logit = jnp.sum(
+        lg * jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype), axis=-1)
+    nll = lse - tgt_logit
+    loss = jnp.mean(nll)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * (
+            aux["load_balance"] + aux["router_z"])
+    return loss, {"nll": jnp.mean(nll), **aux}
+
+
+# ------------------------------------------------------------ serve paths --
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int, *,
+                long_mode: bool = False):
+    """Stacked (over units) per-block caches."""
+    pattern, n_units = cfg.unit_pattern()
+
+    def one_unit():
+        caches = {}
+        for i, kind in enumerate(pattern):
+            if kind.startswith("attn"):
+                if cfg.attention == "mla":
+                    caches[f"b{i}"] = attn.mla_init_cache(cfg, batch, seq_len)
+                else:
+                    caches[f"b{i}"] = attn.gqa_init_cache(
+                        cfg, batch, seq_len, layer_kind=kind,
+                        long_mode=long_mode)
+            else:
+                c = {"ssm": ssm_lib.mamba_init_cache(cfg, batch, seq_len)}
+                if kind == "mamba_attn" and cfg.shared_attention:
+                    c["shared"] = attn.gqa_init_cache(
+                        cfg, batch, seq_len, layer_kind="attn",
+                        long_mode=long_mode)
+                caches[f"b{i}"] = c
+        return caches
+
+    unit = one_unit()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape),
+        unit,
+        is_leaf=lambda x: isinstance(x, jnp.ndarray),
+    )
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, *,
+                long_mode: bool = False):
+    """serve_step: one new token per sequence against the cache.
+
+    token: (B, 1) int32; pos: scalar int32 current position.
+    Returns (logits (B, 1, V), new caches).
+    """
+    pattern, n_units = cfg.unit_pattern()
+    B = token.shape[0]
+    h = embed(params["embed"], token).astype(cfg.cdtype)
+    h = _maybe_add_abs_pos(cfg, h, jnp.full((B, 1), pos, jnp.int32))
+    shared = params.get("shared")
+
+    def unit_fn(h, xs):
+        unit_params, unit_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(pattern):
+            bp, bc = unit_params[f"b{i}"], unit_cache[f"b{i}"]
+            if kind.startswith("attn"):
+                dec = (attn.mla_decode if cfg.attention == "mla"
+                       else attn.gqa_decode)
+                out, nc = dec(bp["attn"], bc,
+                              norm(cfg.norm, bp["norm1"], h), pos, cfg,
+                              layer_kind=kind, long_mode=long_mode)
+                h = h + out
+                hn = norm(cfg.norm, bp["norm2"], h)
+                if cfg.moe is not None:
+                    out, _ = moe_lib.moe_forward(bp["moe"], hn, cfg)
+                    h = h + out
+                else:
+                    h = h + mlp(bp["mlp"], hn, activation=cfg.activation)
+                new_cache[f"b{i}"] = nc
+            else:
+                out, nssm = ssm_lib.mamba_decode(
+                    bp["mamba"], bc["ssm"],
+                    norm(cfg.norm, bp["norm1"], h), pos, cfg)
+                h = h + out
+                nc = {"ssm": nssm}
+                if kind == "mamba_attn" and shared is not None:
+                    out, nkv = attn.gqa_decode(
+                        shared["attn"], bc["shared"],
+                        norm(cfg.norm, shared["norm1"], h), pos, cfg,
+                        layer_kind="attn", long_mode=long_mode)
+                    h = h + out
+                    h = h + mlp(shared["mlp"],
+                                norm(cfg.norm, shared["norm2"], h),
+                                activation=cfg.activation)
+                    nc["shared"] = nkv
+                new_cache[f"b{i}"] = nc
+        return h, new_cache
+
+    h, new_caches = _scan(unit_fn, h, (params["units"], caches))
+    h = norm(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], h)
+    else:
+        logits = linear(params["lm_head"], h).astype(jnp.float32)
+    return logits, new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, frontend_embeds=None,
+            max_len: int | None = None):
+    """Forward pass + cache construction for subsequent decode.
+
+    Returns (last-position logits (B,1,V), caches, aux).  The caches come
+    straight out of the forward pass (each block's post-rope K/V, MLA
+    latents, or final SSM state), so ``decode_step`` continues exactly.
+    ``max_len`` pads non-ring caches with decode headroom.
+    """
+    logits, aux, caches = forward(params, tokens, cfg,
+                                  frontend_embeds=frontend_embeds,
+                                  want_cache=True)
+    if max_len is not None:
+        S = tokens.shape[1]
+        caches = _pad_caches(caches, S, max_len)
+    return logits[:, -1:], caches, aux
+
+
+def _pad_caches(caches, cur_len: int, max_len: int):
+    """Pad full-length (non-ring) KV/MLA caches along the position axis.
+
+    Cache leaves are stacked over units: (n_units, B, L, ...). Ring caches
+    (L == window < cur_len) are left alone — decode masks by age.
+    """
+    def pad(x):
+        L = x.shape[2]
+        if L != cur_len or max_len <= L:
+            return x  # ring buffer or already long enough
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, max_len - L)
+        return jnp.pad(x, widths)
+
+    def walk(c):
+        if isinstance(c, attn.KVCache):
+            return attn.KVCache(k=pad(c.k), v=pad(c.v))
+        if isinstance(c, attn.MLACache):
+            return attn.MLACache(c_kv=pad(c.c_kv), k_rope=pad(c.k_rope))
+        if isinstance(c, ssm_lib.SSMCache):
+            return c
+        if isinstance(c, dict):
+            return {k: walk(v) for k, v in c.items()}
+        raise TypeError(type(c))
+
+    return walk(caches)

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN: top-k router + two dispatch implementations.
+
+* ``dense``    — every expert runs on every token, combined by router weight.
+                 Exact (no token dropping); used by the reduced smoke configs
+                 and as the correctness oracle for the capacity path.
+* ``capacity`` — sort-based dispatch into a static (E, C, D) buffer
+                 (C = top_k * T / E * capacity_factor); per-expert GEMMs are
+                 one einsum; overflow tokens are dropped (standard practice).
+                 This is the dry-run / production path: under GSPMD the
+                 expert axis shards over "model" (expert parallelism) and the
+                 token scatter/gather lowers to all-to-all style collectives.
+
+Router aux losses: load-balance (Switch) + z-loss, returned for logging and
+added to the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _normal, linear, linear_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    e = cfg.moe
+    d = cfg.d_model
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    gated = cfg.activation in ("swiglu", "geglu")
+    p = {
+        "router": {"w": _normal(kr, (d, e.n_experts), d ** -0.5, cfg.pdtype)},
+        "up": _normal(k1, (e.n_experts, d, e.d_expert),
+                      d ** -0.5, cfg.pdtype),
+        "down": _normal(k2, (e.n_experts, e.d_expert, d),
+                        e.d_expert ** -0.5, cfg.pdtype),
+    }
+    if gated:
+        p["gate"] = _normal(k3, (e.n_experts, d, e.d_expert),
+                            d ** -0.5, cfg.pdtype)
+    return p
+
+
+def _expert_ffn(p, h, cfg: ModelConfig, *, expert_axis_in_front: bool):
+    """h: (E, C, D) (capacity) or (T, E?, ...). Gated MLP per expert."""
+    act = jax.nn.silu if cfg.activation in ("swiglu", "silu") else jax.nn.gelu
+    dt = h.dtype
+    if "gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", h, p["gate"].astype(dt))
+        u = jnp.einsum("ecd,edf->ecf", h, p["up"].astype(dt))
+        z = act(g) * u
+    else:
+        z = act(jnp.einsum("ecd,edf->ecf", h, p["up"].astype(dt)))
+    return jnp.einsum("ecf,efd->ecd", z, p["down"].astype(dt))
+
+
+def router_probs(p, x, cfg: ModelConfig):
+    """x: (T, D) -> (probs (T,K), ids (T,K), aux losses dict)."""
+    e = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, ids = jax.lax.top_k(probs_full, e.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise
+    # Switch load-balance loss + router z-loss
+    T = x.shape[0]
+    density = jnp.mean(
+        jax.nn.one_hot(ids[:, 0], e.n_experts, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs_full, axis=0)
+    lb = e.n_experts * jnp.sum(density * mean_prob)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return top_p, ids, {"load_balance": lb, "router_z": z}
+
+
+def moe_forward_dense(p, x, cfg: ModelConfig):
+    """Exact dense-dispatch MoE. x: (B,S,D)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    top_p, ids, aux = router_probs(p, xf, cfg)
+    # run all experts on all tokens: (E, T, D)
+    h = jnp.broadcast_to(xf[None], (e.n_experts, xf.shape[0], D))
+    out_all = _expert_ffn(p, h, cfg, expert_axis_in_front=True)  # (E,T,D)
+    # combine selected experts
+    w = jnp.zeros((xf.shape[0], e.n_experts), jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], ids
+    ].add(top_p)
+    out = jnp.einsum("te,etd->td", w.astype(out_all.dtype), out_all)
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_forward_capacity(p, x, cfg: ModelConfig):
+    """Sort-based static-capacity MoE. x: (B,S,D)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    top_p, ids, aux = router_probs(p, xf, cfg)
+    K, E = e.top_k, e.n_experts
+    C = max(1, int(round(T * K / E * e.capacity_factor)))
+    # flatten (token, choice) pairs and sort by expert
+    flat_e = ids.reshape(-1)                        # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)                     # stable
+    e_s, t_s, p_s = flat_e[order], flat_t[order], flat_p[order]
+    pos = jnp.arange(T * K, dtype=jnp.int32) - jnp.searchsorted(
+        e_s, e_s, side="left").astype(jnp.int32)    # rank within expert
+    keep = pos < C
+    slot = jnp.where(keep, e_s * C + pos, E * C)    # drop -> OOB
+    # dispatch via a SMALL index table + gather (not a (T*K, D) scatter):
+    # scattering activations into the expert-sharded buffer makes XLA's SPMD
+    # scatter partitioner replicate the whole buffer; gathering rows of the
+    # data-sharded activations with an (E*C,) id table partitions as an
+    # operand-passthrough gather — ~10x less data movement (§Perf, qwen3).
+    tok_table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        t_s, mode="drop")[: E * C]                  # empty slot -> pad row T
+    xpad = jnp.concatenate([xf, jnp.zeros((1, D), x.dtype)], axis=0)
+    buf = xpad[tok_table]
+    out_buf = _expert_ffn(p, buf.reshape(E, C, D), cfg,
+                          expert_axis_in_front=True).reshape(E * C, D)
+    # combine back: gather slot outputs, weight, segment-sum over K choices
+    contrib = jnp.where(keep[:, None], out_buf[jnp.minimum(slot, E * C - 1)],
+                        0.0) * p_s[:, None].astype(out_buf.dtype)
+    out = jnp.zeros((T, D), out_buf.dtype).at[t_s].add(contrib)
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    if cfg.moe.impl == "dense":
+        return moe_forward_dense(p, x, cfg)
+    return moe_forward_capacity(p, x, cfg)

@@ -1,0 +1,59 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, see task spec).
+
+For the [vlm] and [audio] architectures we implement the decoder transformer
+only; ``input_specs()`` supplies precomputed frame/patch embeddings of the
+right shape (as a real ViT/SigLIP tower or EnCodec feature extractor would).
+The stub merges those embeddings into the token stream and (for Qwen2-VL)
+builds the 3-stream M-RoPE position ids for a square patch grid.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def merge_frontend(cfg: ModelConfig, token_embeds, frontend_embeds):
+    """Replace the first ``frontend_tokens`` positions with stub embeddings.
+
+    token_embeds: (B, S, d); frontend_embeds: (B, n_front, d).
+    """
+    n = cfg.frontend_tokens
+    if n == 0 or frontend_embeds is None:
+        return token_embeds
+    return jnp.concatenate(
+        [frontend_embeds.astype(token_embeds.dtype), token_embeds[:, n:]],
+        axis=1,
+    )
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq_len: int):
+    """(3, B, S) (t, h, w) position ids: a square patch grid for the stub
+    image followed by text positions (Qwen2-VL scheme: all three streams
+    advance together on text, h/w scan the grid on patches)."""
+    n = cfg.frontend_tokens
+    g = max(1, int(math.sqrt(max(n, 1))))
+    off = g if n > 0 else 0
+    idx = jnp.arange(seq_len)
+    in_img = idx < n
+    row = jnp.where(in_img, idx // g, 0)
+    col = jnp.where(in_img, idx % g, 0)
+    # text positions continue after the image's spatial extent
+    text_pos = off + (idx - n)
+    t = jnp.where(in_img, 0, text_pos)
+    h = jnp.where(in_img, row, text_pos)
+    w = jnp.where(in_img, col, text_pos)
+    pos = jnp.stack([t, h, w], axis=0)                  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len)).astype(
+        jnp.int32)
+
+
+def mrope_text_position(cfg: ModelConfig, pos):
+    """Scalar decode-time (t==h==w) position for a text token at ``pos``
+    (generation is always past the frontend region)."""
+    n = cfg.frontend_tokens
+    off = (max(1, int(math.sqrt(n))) if n > 0 else 0)
+    return off + pos - n

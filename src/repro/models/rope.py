@@ -1,0 +1,102 @@
+"""Rotary position embeddings: standard 1-D, partial/2-D (ChatGLM), and
+M-RoPE (Qwen2-VL multimodal 3-section), plus per-layer theta (Gemma 3 uses
+10k for local layers and 1M for global layers).
+
+All functions take/return (B, S, H, D) query/key tensors and are pure jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _rot_half_pairs(x):
+    """Rotate pairs (x0,x1) -> (-x1, x0) over the last dim (interleaved)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    return jnp.stack([-x2, x1], axis=-1).reshape(x.shape)
+
+
+def _freqs(dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float64) / dim))
+
+
+def _interleave2(x):
+    """[a, b, ...] -> [a, a, b, b, ...] without jnp.repeat (repeat lowers to
+    a gather, which trips XLA's SPMD gather partitioner under partial-manual
+    shard_map at scale)."""
+    return jnp.stack([x, x], axis=-1).reshape(*x.shape[:-1], -1)
+
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float):
+    """cos/sin tables for given integer positions. -> (..., dim) each."""
+    inv = jnp.asarray(_freqs(dim, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., dim/2)
+    return _interleave2(jnp.cos(ang)), _interleave2(jnp.sin(ang))
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B,S,H,D); cos/sin: (B,S,D) or (S,D)."""
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return (x * cos + _rot_half_pairs(x) * sin).astype(x.dtype)
+
+
+def standard_rope(q, k, positions, *, theta: float = 10000.0,
+                  rotary_dim: int | None = None):
+    """Standard RoPE over the first ``rotary_dim`` dims of the head.
+
+    rotary_dim < head_dim gives ChatGLM-style partial ("2d") rotary: GLM
+    applies rotation to half the head dims and leaves the rest untouched.
+    """
+    D = q.shape[-1]
+    rd = rotary_dim or D
+    cos, sin = rope_cos_sin(positions, rd, theta)
+    if rd == D:
+        return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    q_rot = apply_rope(q[..., :rd], cos, sin)
+    k_rot = apply_rope(k[..., :rd], cos, sin)
+    q = jnp.concatenate([q_rot, q[..., rd:]], axis=-1)
+    k = jnp.concatenate([k_rot, k[..., rd:]], axis=-1)
+    return q, k
+
+
+def mrope(q, k, positions_tsw, *, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: the head dim is split into (temporal, height, width)
+    sections, each rotated by its own position stream.
+
+    positions_tsw: (3, B, S) int32 — per-token (t, h, w) position ids.  For
+    pure text all three streams are equal and M-RoPE == RoPE.  ``sections``
+    counts are in *pairs* (sum * 2 == rotary dim).
+    """
+    D = q.shape[-1]
+    rd = 2 * sum(sections)
+    assert rd <= D, (rd, D)
+    inv = jnp.asarray(_freqs(rd, theta), dtype=jnp.float32)  # (rd/2,)
+    # section id of each frequency pair
+    sec = np.concatenate([
+        np.full(s, i) for i, s in enumerate(sections)
+    ])  # (rd/2,)
+    pos = positions_tsw.astype(jnp.float32)  # (3, B, S)
+    # pick position stream per pair
+    ang = jnp.take(pos, jnp.asarray(sec), axis=0)            # (rd/2, B, S)
+    ang = jnp.moveaxis(ang, 0, -1) * inv                     # (B, S, rd/2)
+    cos = _interleave2(jnp.cos(ang))
+    sin = _interleave2(jnp.sin(ang))
+    q_rot = apply_rope(q[..., :rd], cos, sin)
+    k_rot = apply_rope(k[..., :rd], cos, sin)
+    if rd == D:
+        return q_rot, k_rot
+    return (jnp.concatenate([q_rot, q[..., rd:]], axis=-1),
+            jnp.concatenate([k_rot, k[..., rd:]], axis=-1))
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Degenerate (text-only) M-RoPE position ids: all three streams equal."""
+    p = jnp.broadcast_to(positions, positions.shape)
+    return jnp.stack([p, p, p], axis=0)

@@ -1,0 +1,225 @@
+"""Mamba2 block — SSD (state-space duality) form, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of length Q
+the recurrence is computed as a masked (semiseparable) matmul — MXU-friendly —
+and chunks are chained by a short sequential scan over per-chunk states.
+Decode is the O(1)-per-token recurrent update on a (B, H, P, N) state plus a
+rolling conv window — this is what makes ``long_500k`` native for SSM/hybrid
+architectures (no KV cache at all).
+
+Layout: d_inner = expand * d_model, heads H = d_inner / head_dim(P),
+B/C projections per group (n_groups G), state size N = d_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _normal, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + nh  # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, d_proj, dtype=cfg.pdtype),
+        "conv_w": _normal(ks[1], (s.d_conv, conv_dim),
+                          s.d_conv ** -0.5, cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "dt_bias": jnp.zeros((nh,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.pdtype),
+        "D": jnp.ones((nh,), cfg.pdtype),
+        "norm": rmsnorm_init(d_in, dtype=cfg.pdtype),
+        "out_proj": linear_init(ks[2], d_in, cfg.d_model, dtype=cfg.pdtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xBC = xbc_dt[..., : d_in + 2 * gn]
+    dt = xbc_dt[..., d_in + 2 * gn:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K. xBC: (B,S,C); w: (K,C).
+
+    Runs in the activation dtype (bf16): upcasting here makes the (B,S,C)
+    TP gathers f32 and doubles their wire bytes (§Perf); the K=4-tap
+    accumulation is benign in bf16.
+    """
+    K = w.shape[0]
+    w = w.astype(xBC.dtype)
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i: i + xBC.shape[1], :] * w[i][None, None, :]
+        for i in range(K)
+    )
+    return jax.nn.silu(out.astype(jnp.float32) + b[None, None, :].astype(
+        jnp.float32))
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> L (..., Q, Q): L[i,j] = exp(sum_{j<k<=i} dA_k), i>=j."""
+    Q = dA.shape[-1]
+    csum = jnp.cumsum(dA, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp of large positive upper-triangle entries would
+    # overflow and poison gradients through the where
+    return jnp.exp(jnp.where(tril, diff, -jnp.inf))
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs (pre dt-scaling)
+    dt: (B, S, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, S, G, N)   input projections (groups broadcast over heads)
+    Cm: (B, S, G, N)   output projections
+    Returns y: (B, S, H, P)
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    f32 = jnp.float32
+    xdt = x.astype(f32) * dt[..., None].astype(f32)            # (B,S,H,P)
+    dA = dt.astype(f32) * A.astype(f32)[None, None, :]          # (B,S,H)
+    # chunked views
+    xc = xdt.reshape(Bsz, nc, Q, H, P)
+    dAc = dA.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N).astype(f32)
+    # broadcast groups over heads
+    Bh = jnp.repeat(Bc, hpg, axis=3)                            # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, hpg, axis=3)
+    dA_t = jnp.moveaxis(dAc, -1, 2)                             # (B,nc,H,Q)
+    L = _segsum(dA_t)                                           # (B,nc,H,Q,Q)
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)           # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * L, xc)
+    # per-chunk final states: sum_s exp(sum_{s<k<=Q} dA) * B_s x_s
+    csum = jnp.cumsum(dA_t, axis=-1)                            # (B,nc,H,Q)
+    decay_states = jnp.exp(csum[..., -1:] - csum)               # (B,nc,H,Q)
+    states = jnp.einsum("bchs,bcshn,bcshp->bchpn",
+                        decay_states, Bh, xc)                   # (B,nc,H,P,N)
+    # inter-chunk recurrence (sequential over nc)
+    chunk_decay = jnp.exp(csum[..., -1])                        # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((Bsz, H, P, N), f32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # (B,nc,H,P,N)
+    # off-diagonal contribution: y += C_l . exp(A_cum_l) state_prev
+    in_decay = jnp.exp(csum)                                    # (B,nc,H,Q)
+    y_off = jnp.einsum("bclhn,bchl,bchpn->bclhp", Ch, in_decay, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *, return_state: bool = False,
+                  **_):
+    """x: (B, S, d_model) -> (B, S, d_model) (and SSMCache if requested)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    Bsz, S, _ = x.shape
+    proj = linear(params["in_proj"], x)
+    z, xBC_raw, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    gn = s.n_groups * s.d_state
+    xs = xBC[..., :d_in].reshape(Bsz, S, nh, s.head_dim)
+    Bm = xBC[..., d_in: d_in + gn].reshape(Bsz, S, s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gn:].reshape(Bsz, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32)[None, None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32)
+    y = y.reshape(Bsz, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(x.dtype))
+    out = linear(params["out_proj"], y)
+    if return_state:
+        K = s.d_conv
+        tail = xBC_raw[:, S - (K - 1):, :] if S >= K - 1 else jnp.pad(
+            xBC_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        cache = SSMCache(state=final_state,
+                         conv=tail.astype(cfg.cdtype))
+        return out, cache
+    return out
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N) recurrent state
+    conv: jax.Array        # (B, d_conv-1, conv_dim) rolling conv inputs
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, seq_len: int, **_):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.cdtype),
+    )
+
+
+def mamba_decode(params, cache: SSMCache, x, pos, cfg: ModelConfig, **_):
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    Bsz = x.shape[0]
+    proj = linear(params["in_proj"], x[:, 0])     # (B, d_proj)
+    z, xBC, dt = _split_proj(cfg, proj)
+    # rolling conv
+    hist = jnp.concatenate(
+        [cache.conv.astype(jnp.float32), xBC[:, None].astype(jnp.float32)],
+        axis=1)                                    # (B, K, conv_dim)
+    w = params["conv_w"].astype(jnp.float32)       # (K, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(
+        jnp.float32)
+    xBC_c = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:].astype(cache.conv.dtype)
+    gn = s.n_groups * s.d_state
+    xs = xBC_c[..., :d_in].reshape(Bsz, nh, s.head_dim)
+    Bm = xBC_c[..., d_in: d_in + gn].reshape(Bsz, s.n_groups, s.d_state)
+    Cm = xBC_c[..., d_in + gn:].reshape(Bsz, s.n_groups, s.d_state)
+    hpg = nh // s.n_groups
+    Bh = jnp.repeat(Bm, hpg, axis=1)               # (B, H, N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32)[None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None])                  # (B, H)
+    state = (cache.state * decay[..., None, None]
+             + (dt[..., None] * xs)[..., :, None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(Bsz, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(x.dtype))
+    out = linear(params["out_proj"], y)[:, None, :]
+    return out, SSMCache(state=state, conv=new_conv)

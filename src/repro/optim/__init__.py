@@ -1,0 +1,9 @@
+from .optimizers import (AdamWState, MomentumState, adamw_init, adamw_update,
+                         momentum_init, momentum_update, sgd_update,
+                         cosine_lr, step_decay_lr)
+
+__all__ = [
+    "AdamWState", "MomentumState", "adamw_init", "adamw_update",
+    "momentum_init", "momentum_update", "sgd_update", "cosine_lr",
+    "step_decay_lr",
+]

@@ -1,0 +1,98 @@
+"""Optimizers (pure-pytree, no external deps) and LR schedules.
+
+The DGS path does NOT use these for the exchanged update (SAMomentum *is*
+the optimizer there — see core/samomentum.py); they serve the baselines, the
+single-node MSGD reference, and the dense mesh-training path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MomentumState(NamedTuple):
+    velocity: object
+
+
+def momentum_init(params) -> MomentumState:
+    return MomentumState(velocity=jax.tree.map(jnp.zeros_like, params))
+
+
+def momentum_update(params, grads, state: MomentumState, *, lr: float,
+                    momentum: float = 0.9, nesterov: bool = False):
+    v = jax.tree.map(lambda u, g: momentum * u + g, state.velocity, grads)
+    if nesterov:
+        upd = jax.tree.map(lambda g, u: g + momentum * u, grads, v)
+    else:
+        upd = v
+    new_params = jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype),
+                              params, upd)
+    return new_params, MomentumState(velocity=v)
+
+
+def sgd_update(params, grads, *, lr: float):
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                        params, grads)
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(mu=z, nu=z, count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0):
+    c = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(p, m, n):
+        step = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=c)
+
+
+def step_decay_lr(base_lr: float, *, boundaries=(0.6, 0.8), factor=0.1,
+                  total_steps: int = 100):
+    """The paper's schedule: decay by 0.1 at epoch 30 and 40 of 50."""
+    bs = [int(b * total_steps) for b in boundaries]
+
+    def lr_fn(step: int) -> float:
+        lr = base_lr
+        for b in bs:
+            if step >= b:
+                lr *= factor
+        return lr
+
+    return lr_fn
+
+
+def cosine_lr(base_lr: float, *, warmup: int = 100, total_steps: int = 1000,
+              min_frac: float = 0.1):
+    def lr_fn(step: int) -> float:
+        if step < warmup:
+            return base_lr * (step + 1) / warmup
+        t = (step - warmup) / max(1, total_steps - warmup)
+        t = min(1.0, t)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * t)))
+
+    return lr_fn

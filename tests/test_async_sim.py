@@ -1,0 +1,43 @@
+import numpy as np
+
+from repro.core import async_sim
+
+
+def test_schedule_deterministic():
+    a = async_sim.make_schedule(8, 100, seed=5, hetero=0.5)
+    b = async_sim.make_schedule(8, 100, seed=5, hetero=0.5)
+    np.testing.assert_array_equal(a, b)
+    assert set(np.unique(a)) <= set(range(8))
+
+
+def test_schedule_fair_when_homogeneous():
+    s = async_sim.make_schedule(4, 4000, seed=0, hetero=0.0)
+    counts = np.bincount(s, minlength=4)
+    assert counts.min() > 0.8 * counts.max()
+
+
+def test_schedule_stragglers_when_heterogeneous():
+    s = async_sim.make_schedule(4, 4000, seed=0, hetero=1.5)
+    counts = np.bincount(s, minlength=4)
+    assert counts.max() > 2 * counts.min()  # fast workers dominate
+
+
+def test_staleness_grows_with_workers():
+    import jax, jax.numpy as jnp
+    from repro.core import make_strategy
+
+    def grad_fn(p, b):
+        return jnp.sum(p["w"] ** 2), jax.tree.map(lambda x: 2 * x, p)
+
+    def batch_fn(e, k):
+        return None
+
+    params0 = {"w": jnp.ones((4,))}
+    stats = []
+    for n in (2, 8):
+        tr = async_sim.AsyncTrainer(make_strategy("asgd"), grad_fn, n,
+                                    lr=0.01)
+        sched = async_sim.make_schedule(n, 120, seed=1, hetero=0.3)
+        _, _, hist = tr.run(params0, sched, batch_fn)
+        stats.append(hist.staleness[n * 2:].mean())
+    assert stats[1] > stats[0]

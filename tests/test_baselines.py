@@ -1,0 +1,85 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, make_strategy
+from repro.core.sparsify import SparseLeaf, sparse_to_dense
+
+
+def _grads():
+    key = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(key, (10, 10)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (5,))}
+
+
+def _params():
+    return {"w": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+
+
+def test_asgd_dense_message():
+    s = make_strategy("asgd")
+    st0 = s.init(_params())
+    _, msg = s.step(st0, _grads(), lr=0.1)
+    assert all(not isinstance(m, SparseLeaf) for m in msg)
+    # leaves order is alphabetical: msg[0] == "b"
+    np.testing.assert_allclose(msg[0], 0.1 * _grads()["b"], rtol=1e-6)
+
+
+def test_gd_residual_bookkeeping():
+    """GD: residual + message == accumulated lr*grads at every step."""
+    s = make_strategy("gd_async", density=0.05)
+    st = s.init(_params())
+    acc = {k: np.zeros(v.size) for k, v in _params().items()}
+    for t in range(4):
+        g = jax.tree.map(lambda x: x * (t + 1), _grads())
+        st, msg = s.step(st, g, lr=0.1)
+        for key_i, (k, v) in enumerate(sorted(_params().items())):
+            acc[k] += 0.1 * np.asarray(jax.tree.leaves(g)[key_i]).reshape(-1)
+        sent = [np.asarray(sparse_to_dense(m)) for m in msg]
+        resid = [np.asarray(r) for r in jax.tree.leaves(st.inner)]
+        for i, k in enumerate(sorted(acc)):
+            np.testing.assert_allclose(sent[i] + resid[i], acc[k], rtol=1e-5)
+            acc[k] -= sent[i]
+
+
+def test_dgc_momentum_masking():
+    """DGC zeroes velocity AND residual on sent coordinates."""
+    s = make_strategy("dgc_async", density=0.05, momentum=0.9)
+    st = s.init(_params())
+    st, msg = s.step(st, _grads(), lr=0.1)
+    for m, u, r in zip(msg, jax.tree.leaves(st.inner.velocity),
+                       jax.tree.leaves(st.inner.residual)):
+        idx = np.asarray(m.indices)
+        assert np.all(np.asarray(u)[idx] == 0.0)
+        assert np.all(np.asarray(r)[idx] == 0.0)
+
+
+def test_dgc_clipping():
+    s = make_strategy("dgc_async", density=1.0, clip_norm=0.001)
+    st = s.init(_params())
+    _, msg = s.step(st, _grads(), lr=1.0)
+    total = np.sqrt(sum(float(jnp.sum(m.values ** 2)) for m in msg))
+    assert total <= 0.001 + 1e-6
+
+
+def test_dgs_message_k_sizes():
+    s = make_strategy("dgs", density=0.03)
+    st = s.init(_params())
+    _, msg = s.step(st, _grads(), lr=0.1)
+    # leaves order alphabetical: b (5,), then w (100,)
+    assert msg[0].k == max(1, round(0.03 * 5))
+    assert msg[1].k == max(1, round(0.03 * 100))
+
+
+def test_unknown_strategy():
+    with pytest.raises(ValueError):
+        make_strategy("nope")
+
+
+def test_msgd_step():
+    p, u = _params(), jax.tree.map(jnp.zeros_like, _params())
+    g = _grads()
+    p2, u2 = baselines.msgd_step(p, u, g, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(u2["b"], 0.1 * g["b"], rtol=1e-6)
+    np.testing.assert_allclose(p2["b"], -0.1 * g["b"], rtol=1e-6)

@@ -1,0 +1,174 @@
+"""Model-difference server invariants and the DGS == ASGD equivalence
+(paper Eq. 2-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import async_sim, make_strategy, server as ps
+from repro.core.sparsify import SparseLeaf
+
+
+def _params():
+    return {"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))}
+
+
+def _problem(seed=0):
+    key = jax.random.PRNGKey(seed)
+    Wt = jax.random.normal(key, (6, 4))
+
+    def grad_fn(params, batch):
+        x, y = batch
+
+        def loss(p):
+            return jnp.mean((x @ p["w"] + p["b"][None, :3].sum() - y) ** 2)
+
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(e, k):
+        kk = jax.random.PRNGKey(e * 131 + k + 1)
+        x = jax.random.normal(kk, (8, 6))
+        return x, x @ Wt
+
+    return grad_fn, batch_fn
+
+
+class TestServerInvariants:
+    def test_theta_equals_theta0_plus_M(self):
+        """Eq. 2: global model == theta_0 + M at every timestamp."""
+        params0 = _params()
+        state = ps.init(params0, n_workers=2)
+        rng = np.random.default_rng(0)
+        # leaves order alphabetical: b (3,), then w (24,)
+        manual = [np.zeros(3), np.zeros(24)]
+        for t in range(5):
+            msg = [SparseLeaf(values=jnp.asarray([0.5], jnp.float32),
+                              indices=jnp.asarray([t % 3], jnp.int32),
+                              size=3),
+                   SparseLeaf(values=jnp.asarray(rng.normal(size=3),
+                                                 dtype=jnp.float32),
+                              indices=jnp.asarray(
+                                  rng.choice(24, 3, replace=False),
+                                  dtype=jnp.int32),
+                              size=24)]
+            state = ps.receive(state, msg)
+            for j, m in enumerate(msg):
+                np.add.at(manual[j], np.asarray(m.indices),
+                          -np.asarray(m.values))
+        model = ps.global_model(params0, state)
+        np.testing.assert_allclose(model["b"], manual[0], rtol=1e-6)
+        np.testing.assert_allclose(model["w"].reshape(-1), manual[1],
+                                   rtol=1e-6)
+
+    def test_v_equals_M_after_send(self):
+        """Eq. 4: without secondary compression, v_k == M after serving k."""
+        params0 = _params()
+        state = ps.init(params0, n_workers=3)
+        rng = np.random.default_rng(1)
+        for t in range(4):
+            msg = [SparseLeaf(jnp.asarray(rng.normal(size=2), jnp.float32),
+                              jnp.asarray(rng.choice(24, 2, replace=False),
+                                          jnp.int32), 24),
+                   SparseLeaf(jnp.asarray([1.0], jnp.float32),
+                              jnp.asarray([0], jnp.int32), 3)]
+            state = ps.receive(state, msg)
+            state, G = ps.send(state, worker_id=t % 3)
+            wid = t % 3
+            for M_leaf, v_leaf in zip(state.M, state.v):
+                np.testing.assert_allclose(v_leaf[wid], M_leaf, rtol=1e-6)
+
+    def test_secondary_compression_conserves_mass(self):
+        """Eq. 6: with secondary compression, (M - v_k) holds exactly the
+        not-yet-shipped remainder; shipping everything reconciles."""
+        params0 = _params()
+        state = ps.init(params0, n_workers=1)
+        rng = np.random.default_rng(2)
+        for t in range(6):
+            msg = [SparseLeaf(jnp.asarray(rng.normal(size=4), jnp.float32),
+                              jnp.asarray(rng.choice(24, 4, replace=False),
+                                          jnp.int32), 24),
+                   SparseLeaf(jnp.asarray([0.3], jnp.float32),
+                              jnp.asarray([1], jnp.int32), 3)]
+            state = ps.receive(state, msg)
+            state, G = ps.send(state, 0, secondary_density=0.1)
+        # residual = M - v is whatever wasn't shipped; a dense send clears it
+        state2, G_full = ps.send(state, 0, secondary_density=None)
+        for M_leaf, v_leaf in zip(state2.M, state2.v):
+            np.testing.assert_allclose(v_leaf[0], M_leaf, rtol=1e-6)
+
+
+class TestEquivalence:
+    def test_dgs_plain_density1_equals_asgd(self):
+        """Eq. 5: DGS transport without sparsification IS ASGD — exact."""
+        grad_fn, batch_fn = _problem()
+        params0 = _params()
+        sched = async_sim.make_schedule(3, 60, seed=2, hetero=1.0)
+        tr_a = async_sim.AsyncTrainer(make_strategy("asgd"), grad_fn, 3,
+                                      lr=0.05)
+        tr_d = async_sim.AsyncTrainer(make_strategy("dgs_plain", density=1.0),
+                                      grad_fn, 3, lr=0.05)
+        fa, _, ha = tr_a.run(params0, sched, batch_fn)
+        fd, _, hd = tr_d.run(params0, sched, batch_fn)
+        for a, d in zip(jax.tree.leaves(fa), jax.tree.leaves(fd)):
+            np.testing.assert_allclose(a, d, atol=1e-5)
+        np.testing.assert_allclose(ha.losses, hd.losses, atol=1e-5)
+
+    def test_dgs_sam_density1_matches_msgd_single_worker(self):
+        """One worker, no sparsification: DGS+SAMomentum == single-node
+        momentum SGD stepping on the same batches."""
+        grad_fn, batch_fn = _problem()
+        params0 = _params()
+        sched = np.zeros(30, dtype=np.int32)  # single worker
+        m = 0.7
+        tr = async_sim.AsyncTrainer(
+            make_strategy("dgs", density=1.0, momentum=m), grad_fn, 1,
+            lr=0.05)
+        fd, _, _ = tr.run(params0, sched, batch_fn)
+        batches = [batch_fn(e, 0) for e in range(30)]
+        fm, _ = async_sim.run_msgd(params0, grad_fn, batches, lr=0.05,
+                                   momentum=m)
+        for a, b in zip(jax.tree.leaves(fd), jax.tree.leaves(fm)):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+
+    def test_sparse_dgs_converges(self):
+        grad_fn, batch_fn = _problem()
+        params0 = _params()
+        sched = async_sim.make_schedule(4, 300, seed=3, hetero=0.8)
+        tr = async_sim.AsyncTrainer(
+            make_strategy("dgs", density=0.125, momentum=0.5), grad_fn, 4,
+            lr=0.05)
+        _, _, hist = tr.run(params0, sched, batch_fn)
+        assert hist.losses[-20:].mean() < 0.05 * hist.losses[:5].mean()
+
+    def test_sparse_comm_is_smaller(self):
+        grad_fn, batch_fn = _problem()
+        params0 = _params()
+        sched = async_sim.make_schedule(4, 40, seed=4)
+        dense = async_sim.AsyncTrainer(make_strategy("asgd"), grad_fn, 4,
+                                       lr=0.05)
+        sparse = async_sim.AsyncTrainer(
+            make_strategy("dgs", density=0.1, momentum=0.7), grad_fn, 4,
+            lr=0.05)
+        _, _, hd = dense.run(params0, sched, batch_fn)
+        _, _, hs = sparse.run(params0, sched, batch_fn)
+        assert hs.up_bytes < 0.35 * hd.up_bytes
+        assert hs.down_bytes < hd.down_bytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(5, 40), st.integers(0, 2 ** 31))
+def test_property_difference_tracking_reconstructs(n_workers, n_events,
+                                                   seed):
+    """Whatever the schedule, theta_0 + M always equals the serially-applied
+    sum of received updates (difference tracking loses nothing)."""
+    grad_fn, batch_fn = _problem(seed % 97)
+    params0 = _params()
+    sched = async_sim.make_schedule(n_workers, n_events, seed=seed % 1000,
+                                    hetero=1.0)
+    tr = async_sim.AsyncTrainer(make_strategy("dgs", density=0.2),
+                                grad_fn, n_workers, lr=0.02)
+    final, sstate, _ = tr.run(params0, sched, batch_fn)
+    # M must equal final - theta0 exactly
+    model = ps.global_model(params0, sstate)
+    for a, b in zip(jax.tree.leaves(model), jax.tree.leaves(final)):
+        np.testing.assert_allclose(a, b, atol=1e-6)

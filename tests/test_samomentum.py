@@ -1,0 +1,91 @@
+"""SAMomentum semantics: paper Eq. (11)/(12) and the Eq. (13)/(14)
+equivalence theorem (sparsification == per-parameter enlarged batch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import samomentum
+
+
+def test_eq12_semantics():
+    """After one step, sent coords hold m*u+lr*g; unsent hold (m*u+lr*g)/m."""
+    m, lr, k = 0.7, 0.1, 2
+    u0 = jnp.asarray([1.0, -0.05, 0.02, 2.0])
+    g = jnp.asarray([0.5, 0.01, -0.01, -0.3])
+    msg, u1 = samomentum.leaf_update(u0, g, momentum=m, lr=lr, k=k)
+    uacc = m * u0 + lr * g
+    sent = set(np.asarray(msg.indices).tolist())
+    assert sent == {0, 3}  # largest |uacc|
+    for i in range(4):
+        if i in sent:
+            np.testing.assert_allclose(u1[i], uacc[i], rtol=1e-6)
+        else:
+            np.testing.assert_allclose(u1[i], uacc[i] / m, rtol=1e-6)
+    # message carries the full velocity of sent coords (with lr baked in)
+    for i, v in zip(np.asarray(msg.indices), np.asarray(msg.values)):
+        np.testing.assert_allclose(v, uacc[i], rtol=1e-6)
+
+
+def test_telescoping_theorem():
+    """Eq. (13): if a coordinate stays below threshold for T-1 steps and is
+    sent at step T, its sent value equals m*u_c + lr * sum(grads) — vanilla
+    momentum with batch (and lr) enlarged T-fold (Eq. 14)."""
+    m, lr, T = 0.7, 0.05, 6
+    rng = np.random.default_rng(0)
+    # coordinate 0: tiny grads then huge; coordinate 1: always huge (sent)
+    grads = [jnp.asarray([0.01 * rng.standard_normal(), 5.0]) for _ in
+             range(T - 1)]
+    grads.append(jnp.asarray([100.0, 5.0]))
+    u = jnp.asarray([0.3, 0.0])
+    u_c = u[0]
+    for t, g in enumerate(grads):
+        msg, u = samomentum.leaf_update(u, g, momentum=m, lr=lr, k=1)
+        sent = np.asarray(msg.indices).tolist()
+        if t < T - 1:
+            assert sent == [1]   # coordinate 0 unsent
+        else:
+            assert sent == [0]   # finally sent
+            expected = m * u_c + lr * sum(float(g[0]) for g in grads)
+            np.testing.assert_allclose(float(msg.values[0]), expected,
+                                       rtol=1e-5)
+
+
+def test_density_one_is_heavy_ball():
+    """k = size -> every coordinate sent every step == vanilla momentum."""
+    m, lr = 0.9, 0.1
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, (16,))
+    v = u
+    for i in range(5):
+        g = jax.random.normal(jax.random.fold_in(key, i), (16,))
+        msg, u = samomentum.leaf_update(u, g, momentum=m, lr=lr, k=16)
+        v = m * v + lr * g   # heavy ball
+        np.testing.assert_allclose(
+            np.sort(np.asarray(msg.values)), np.sort(np.asarray(v)),
+            rtol=1e-5)
+        np.testing.assert_allclose(u, v, rtol=1e-5)
+
+
+def test_no_residual_buffer():
+    """SAMomentum state is exactly one velocity pytree (memory win vs DGC)."""
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    state = samomentum.init(params)
+    leaves = jax.tree.leaves(state)
+    assert sum(l.size for l in leaves) == 8 * 8 + 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.floats(0.3, 0.99), st.integers(0, 2 ** 31))
+def test_property_unsent_amplification(n, m, seed):
+    """Unsent coordinates are exactly divided by m (so the next step's m*
+    decay cancels): u_new * m == u_acc on unsent coords."""
+    key = jax.random.PRNGKey(seed)
+    u0 = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    k = max(1, n // 4)
+    msg, u1 = samomentum.leaf_update(u0, g, momentum=m, lr=0.1, k=k)
+    uacc = m * u0 + 0.1 * g
+    sent = np.zeros(n, bool)
+    sent[np.asarray(msg.indices)] = True
+    np.testing.assert_allclose(np.where(sent, u1, u1 * m), uacc, rtol=2e-4)

@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify
+
+
+class TestTopK:
+    def test_topk_select_basic(self):
+        x = jnp.asarray([0.1, -5.0, 3.0, 0.0, -0.2])
+        leaf = sparsify.topk_select(x, 2)
+        assert set(np.asarray(leaf.indices).tolist()) == {1, 2}
+        assert leaf.size == 5
+
+    def test_density_to_k(self):
+        assert sparsify.density_to_k(1000, 0.01) == 10
+        assert sparsify.density_to_k(10, 0.001) == 1   # floor of 1
+        assert sparsify.density_to_k(10, 1.0) == 10
+        with pytest.raises(ValueError):
+            sparsify.density_to_k(10, 0.0)
+
+    def test_threshold_matches_kth(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (503,))
+        thr = sparsify.topk_threshold(x, 37)
+        assert int(jnp.sum(jnp.abs(x) >= thr)) == 37
+
+    def test_decode_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+        leaf = sparsify.topk_select(x, 19)
+        dense = sparsify.sparse_to_dense(leaf)
+        mask = sparsify.topk_mask(x, 19)
+        np.testing.assert_allclose(dense, jnp.where(mask, x, 0.0), atol=0)
+
+    def test_threshold_select_equals_topk(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1024,))
+        k = 33
+        thr = sparsify.topk_threshold(x, k)
+        a = sparsify.threshold_select(x, thr, k)
+        b = sparsify.topk_select(x, k)
+        assert set(np.asarray(a.indices).tolist()) == \
+            set(np.asarray(b.indices).tolist())
+
+    def test_sampled_threshold_reasonable(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (1 << 16,))
+        thr = sparsify.sampled_threshold(x, 0.01, sample_size=4096)
+        frac = float(jnp.mean(jnp.abs(x) >= thr))
+        assert 0.002 < frac < 0.05  # near 1%
+
+
+class TestTree:
+    def _tree(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"a": jax.random.normal(k1, (32, 16)),
+                "b": jax.random.normal(k2, (100,)),
+                "c": {"d": jax.random.normal(k3, (7,))}}
+
+    def test_tree_sparsify_residual_disjoint(self):
+        tree = self._tree(jax.random.PRNGKey(0))
+        msgs, resid = sparsify.tree_sparsify(tree, 0.1)
+        for m, leaf, r in zip(msgs, jax.tree.leaves(tree),
+                              jax.tree.leaves(resid)):
+            dense = sparsify.sparse_to_dense(m).reshape(leaf.shape)
+            # message + residual reconstructs the original exactly
+            np.testing.assert_allclose(dense + r, leaf, atol=1e-7)
+            # supports are disjoint
+            assert not np.any((np.asarray(dense) != 0) & (np.asarray(r) != 0))
+
+    def test_message_bytes(self):
+        tree = self._tree(jax.random.PRNGKey(1))
+        msgs, _ = sparsify.tree_sparsify(tree, 0.1)
+        ks = sparsify.tree_ks(tree, 0.1)
+        assert sparsify.message_bytes(msgs) == sum(k * 8 for k in ks)
+        assert sparsify.dense_bytes(tree) == (32 * 16 + 100 + 7) * 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 300), st.floats(0.01, 1.0), st.integers(0, 2 ** 31))
+def test_property_k_nonzeros(n, density, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    k = sparsify.density_to_k(n, density)
+    leaf = sparsify.topk_select(x, k)
+    assert leaf.values.shape == (k,)
+    # top-k magnitudes dominate everything not selected
+    sel = set(np.asarray(leaf.indices).tolist())
+    mag = np.abs(np.asarray(x))
+    if len(sel) < n:
+        unsel_max = max(mag[i] for i in range(n) if i not in sel)
+        sel_min = min(mag[i] for i in sel)
+        assert sel_min >= unsel_max - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 200), st.integers(1, 50), st.integers(0, 2 ** 31))
+def test_property_decode_preserves_values(n, k, seed):
+    k = min(k, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    leaf = sparsify.topk_select(x, k)
+    dense = np.asarray(sparsify.sparse_to_dense(leaf))
+    for i, v in zip(np.asarray(leaf.indices), np.asarray(leaf.values)):
+        assert dense[i] == v

@@ -1,0 +1,98 @@
+"""End-to-end behaviour: the paper's headline claims at smoke scale.
+
+These mirror EXPERIMENTS.md §Paper-validation: on the same async schedule,
+(1) every sparsified strategy slashes upward communication ~10x at density
+0.1, and (2) DGS converges at least as well as GD-async / plain ASGD under
+staleness (the paper's Fig.1/Table III ordering; the full-strength version
+runs in benchmarks/).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import async_sim, make_strategy
+from repro.data.synthetic import ClassificationTask
+
+
+def _mlp_problem(task):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        h = 32
+        return {
+            "w1": jax.random.normal(k1, (task.n_features, h)) * 0.2,
+            "b1": jnp.zeros((h,)),
+            "w2": jax.random.normal(k2, (h, task.n_classes)) * 0.2,
+            "b2": jnp.zeros((task.n_classes,)),
+        }
+
+    def apply(p, x):
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def grad_fn(p, batch):
+        x, y = batch
+
+        def loss(p):
+            logits = apply(p, x)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(lp[jnp.arange(x.shape[0]), y])
+
+        return jax.value_and_grad(loss)(p)
+
+    return init, apply, grad_fn
+
+
+def _accuracy(apply, params, task):
+    x, y = task.eval_set(256)
+    pred = jnp.argmax(apply(params, x), axis=-1)
+    return float(jnp.mean(pred == y))
+
+
+def test_async_training_end_to_end():
+    task = ClassificationTask(n_features=32, n_classes=5, batch_size=32,
+                              noise=0.5, seed=0)
+    init, apply, grad_fn = _mlp_problem(task)
+    params0 = init(jax.random.PRNGKey(0))
+    sched = async_sim.make_schedule(8, 400, seed=1, hetero=0.8)
+
+    def batch_fn(e, k):
+        return task.batch(e, worker=k)
+
+    results = {}
+    for name, kw in [("asgd", {}),
+                     ("gd_async", {"density": 0.1}),
+                     ("dgs", {"density": 0.1, "momentum": 0.5})]:
+        tr = async_sim.AsyncTrainer(make_strategy(name, **kw), grad_fn, 8,
+                                    lr=0.1)
+        final, _, hist = tr.run(params0, sched, batch_fn)
+        results[name] = {"acc": _accuracy(apply, final, task),
+                         "up": hist.up_bytes, "loss": hist.losses}
+    # everyone learns
+    for name, r in results.items():
+        assert r["acc"] > 0.7, (name, r["acc"])
+    # sparse strategies move ~10x less data upward
+    assert results["dgs"]["up"] < 0.2 * results["asgd"]["up"]
+    assert results["gd_async"]["up"] < 0.2 * results["asgd"]["up"]
+    # DGS with momentum at least matches the momentum-free sparsifier
+    assert results["dgs"]["acc"] >= results["gd_async"]["acc"] - 0.05
+
+
+def test_secondary_compression_reduces_downlink():
+    task = ClassificationTask(n_features=32, n_classes=5, batch_size=32,
+                              seed=0)
+    init, apply, grad_fn = _mlp_problem(task)
+    params0 = init(jax.random.PRNGKey(0))
+    sched = async_sim.make_schedule(6, 150, seed=2, hetero=0.6)
+
+    def batch_fn(e, k):
+        return task.batch(e, worker=k)
+
+    base = async_sim.AsyncTrainer(
+        make_strategy("dgs", density=0.1, momentum=0.5), grad_fn, 6, lr=0.1)
+    comp = async_sim.AsyncTrainer(
+        make_strategy("dgs", density=0.1, momentum=0.5), grad_fn, 6, lr=0.1,
+        secondary_density=0.05)
+    _, _, hb = base.run(params0, sched, batch_fn)
+    fc, _, hc = comp.run(params0, sched, batch_fn)
+    assert hc.down_bytes < hb.down_bytes
+    assert _accuracy(apply, fc, task) > 0.7
