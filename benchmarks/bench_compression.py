@@ -59,12 +59,36 @@ def run(quick: bool = False):
     t_topk = _time(lambda: topk_jit(u))
     rows.append(csv_row("kernel/block_topk_interp", t_hier,
                         f"lax_topk_us={t_topk:.1f};k={k}"))
+    rows.extend(run_engines(quick=quick))
     rows.extend(run_quantization(quick=quick))
     return rows
 
 
-if __name__ == "__main__":
-    print("\n".join(run(quick=True)))
+def run_engines(quick: bool = False):
+    """Engine-vs-engine SAMomentum step timing through core/engine.py.
+
+    One full accumulate -> select -> rescale step per engine on the same
+    tensor (interpret-mode Pallas for blockwise on CPU — correctness-path
+    timing, NOT TPU performance; blockwise runs oversampled r=32 as in
+    production).
+    """
+    from repro.core.engine import CompressionSpec, samomentum_step
+
+    rows = []
+    n = 1 << 14 if quick else 1 << 18
+    k = max(1, n // 100)
+    u = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    g = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    # sample_size must be << n or the sampled row degenerates into an
+    # exact full-tensor threshold (quick n is below the 65536 default)
+    for spec in (CompressionSpec(engine="exact"),
+                 CompressionSpec(engine="sampled", sample_size=max(64, n // 16)),
+                 CompressionSpec(engine="blockwise", block_r=32)):
+        step = jax.jit(lambda u, g, _s=spec: samomentum_step(
+            u, g, momentum=0.7, lr=0.1, k=k, spec=_s))
+        t = _time(lambda: step(u, g))
+        rows.append(csv_row(f"engine/{spec.engine}", t, f"n={n};k={k}"))
+    return rows
 
 
 def run_quantization(quick: bool = False):
@@ -88,3 +112,7 @@ def run_quantization(quick: bool = False):
             f"quantize/dgs_{q}", 0.0,
             f"acc={accuracy(final):.4f};up_bytes={hist.up_bytes}"))
     return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(quick=True)))

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast CI path: fail on the first broken test, quiet output.
+# Full tier-1 sweep (no -x) is what .github/workflows/ci.yml runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -x "$@"

@@ -1,0 +1,78 @@
+"""JAX version compatibility backfills (installed jax is 0.4.x).
+
+The framework is written against the current jax API surface
+(``jax.shard_map`` with ``check_vma``/``axis_names``, ``jax.lax.axis_size``,
+``jax.make_mesh(..., axis_types=...)``).  On jax 0.4.x those spellings do
+not exist yet; this module backfills the small adapters so the same source
+runs on both.  Imported for its side effects by ``repro.core`` and
+``repro.launch`` (every entry point into the mesh/exchange code).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, axis_names=None, in_specs, out_specs,
+                  check_vma: bool = True):
+        """jax>=0.6 ``jax.shard_map`` spelling on the 0.4.x experimental API.
+
+        ``axis_names`` lists the MANUAL axes; every other mesh axis is left
+        to GSPMD (the 0.4.x ``auto`` frozenset, inverted).  ``check_vma``
+        maps onto the old ``check_rep``.
+        """
+        manual = (frozenset(mesh.axis_names) if axis_names is None
+                  else frozenset(axis_names))
+        auto = frozenset(mesh.axis_names) - manual
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma),
+                          auto=auto)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        """Size of a manual collective axis (psum-of-ones classic)."""
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def jax_version() -> tuple:
+    """(major, minor) of the installed jax."""
+    return tuple(int(x) for x in jax.__version__.split(".")[:2])
+
+
+def supports_partial_auto_shard_map() -> bool:
+    """Whether shard_map with mixed manual + auto axes (auto axis size > 1)
+    works.  On jax 0.4.x it crashes the XLA SPMD partitioner
+    (hlo_sharding_util IsManualSubgroup check); callers fall back to
+    model_par=1 there."""
+    return jax_version() >= (0, 5)
+
+
+def make_mesh_kwargs(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh`` marking all axes GSPMD-auto, on jax
+    versions that support ``axis_types`` — empty dict otherwise (0.4.x has
+    neither the kwarg nor ``jax.sharding.AxisType``)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+_install_shard_map()
+_install_axis_size()

@@ -28,8 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import engine as engine_lib
 from . import server as ps
 from .baselines import Strategy, msgd_step
+from .engine import CompressionSpec
 from .sparsify import SparseLeaf, message_bytes
 
 
@@ -79,6 +81,8 @@ class AsyncTrainer:
     n_workers: int
     lr: float
     secondary_density: float | None = None
+    # engine/quantize spec for the server's secondary (downward) compression
+    secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC
 
     def init(self, params0):
         workers = [
@@ -92,7 +96,8 @@ class AsyncTrainer:
         wstrat, msg = self.strategy.step(wstrat, grads, lr)
         sstate = ps.receive(sstate, msg)
         sstate, G = ps.send(
-            sstate, worker_id, secondary_density=self.secondary_density
+            sstate, worker_id, secondary_density=self.secondary_density,
+            spec=self.secondary_spec,
         )
         wparams = ps.apply_to_params(wparams, G)
         return sstate, wparams, wstrat, loss, msg, G
@@ -129,7 +134,8 @@ class AsyncTrainer:
             last_sync[k] = e + 1
             vb = getattr(self.strategy, "value_bits", 32)
             up_bytes += _msg_bytes(msg, value_bits=vb)
-            down_bytes += _msg_bytes(G)
+            down_bytes += _msg_bytes(
+                G, value_bits=self.secondary_spec.value_bits)
             if eval_fn is not None and eval_every and (e + 1) % eval_every == 0:
                 model = ps.global_model(params0, sstate)
                 evals.append((e + 1, eval_fn(model)))

@@ -13,6 +13,11 @@ A strategy owns only the *worker-side* state and the upward message:
 msg is either a list[SparseLeaf] (sparsified strategies) or a list of flat
 dense arrays (ASGD).  The message always includes the learning rate (the
 server applies it verbatim: M <- M - decode(msg)).
+
+All top-k selection goes through core/engine.py: every sparse strategy has
+an ``engine`` knob ("exact" | "sampled" | "blockwise" | "auto") and a
+``quantize`` wire-quantization knob — they compose uniformly instead of
+being DGS-only (DESIGN.md §Compression-engine).
 """
 from __future__ import annotations
 
@@ -22,8 +27,10 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import engine as engine_lib
 from . import samomentum
-from .sparsify import SparseLeaf, density_to_k, topk_select
+from .engine import CompressionSpec
+from .sparsify import density_to_k
 
 
 class StrategyState(NamedTuple):
@@ -34,6 +41,18 @@ class StrategyState(NamedTuple):
 class Strategy:
     name: str = "base"
     sparse: bool = False
+    engine: str = "exact"
+    quantize: str = "none"
+
+    @property
+    def spec(self) -> CompressionSpec:
+        """The compression-engine spec this strategy selects with."""
+        return CompressionSpec(engine=self.engine, quantize=self.quantize)
+
+    @property
+    def value_bits(self) -> int:
+        """Wire bits per message value (byte accounting in async_sim)."""
+        return self.spec.value_bits
 
     def init(self, params) -> StrategyState:
         raise NotImplementedError
@@ -77,13 +96,14 @@ class GDAsync(Strategy):
         return StrategyState(inner=resid)
 
     def step(self, state, grads, lr):
+        spec = self.spec
         resid_leaves, treedef = jax.tree.flatten(state.inner)
         g_leaves = jax.tree.leaves(grads)
         msgs, new_resid = [], []
         for r, g in zip(resid_leaves, g_leaves):
             r = r + lr * g.reshape(-1).astype(jnp.float32)
             k = density_to_k(int(r.shape[0]), self.density)
-            msg = topk_select(r, k)
+            msg = engine_lib.select(r, k, spec)
             msgs.append(msg)
             new_resid.append(r.at[msg.indices].set(0.0))
         return StrategyState(inner=jax.tree.unflatten(treedef, new_resid)), msgs
@@ -114,6 +134,7 @@ class DGCAsync(Strategy):
         return StrategyState(inner=_DGCState(velocity=z, residual=z))
 
     def step(self, state, grads, lr):
+        spec = self.spec
         u_leaves, treedef = jax.tree.flatten(state.inner.velocity)
         r_leaves = jax.tree.leaves(state.inner.residual)
         g_leaves = jax.tree.leaves(grads)
@@ -125,10 +146,12 @@ class DGCAsync(Strategy):
             g_leaves = [g * scale for g in g_leaves]
         msgs, new_u, new_r = [], [], []
         for u, r, g in zip(u_leaves, r_leaves, g_leaves):
-            u = self.momentum * u + lr * g.reshape(-1).astype(jnp.float32)
+            u = engine_lib.velocity_accumulate(
+                u, g.reshape(-1).astype(jnp.float32),
+                momentum=self.momentum, lr=lr)
             r = r + u
             k = density_to_k(int(r.shape[0]), self.density)
-            msg = topk_select(r, k)
+            msg = engine_lib.select(r, k, spec)
             msgs.append(msg)
             new_r.append(r.at[msg.indices].set(0.0))
             new_u.append(u.at[msg.indices].set(0.0))  # momentum factor masking
@@ -149,34 +172,27 @@ class DGS(Strategy):
 
     ``quantize`` composes wire quantization with the sparse message — the
     paper's stated future work (TernGrad combination, §Conclusion):
-    "none" | "bf16" | "int8" | "tern".
+    "none" | "bf16" | "int8" | "tern".  ``engine`` picks the top-k selector
+    (core/engine.py registry).
     """
 
     name: str = "dgs"
     sparse: bool = True
     density: float = 0.01
     momentum: float = 0.7
-    quantize: str = "none"
-
-    @property
-    def value_bits(self) -> int:
-        return {"none": 32, "bf16": 16, "int8": 8, "tern": 2}[self.quantize]
 
     def init(self, params):
         return StrategyState(inner=samomentum.init(params))
 
     def step(self, state, grads, lr):
-        from .sparsify import quantize_msgs
-
         msgs, new_sam = samomentum.tree_update(
             state.inner,
             grads,
             momentum=self.momentum,
             lr=lr,
             density=self.density,
+            spec=self.spec,
         )
-        if self.quantize != "none":
-            msgs, _ = quantize_msgs(msgs, self.quantize)
         return StrategyState(inner=new_sam), msgs
 
 
@@ -192,16 +208,23 @@ class DGSPlain(Strategy):
     sparse: bool = True
     density: float = 0.01
 
+    def _delegate(self) -> GDAsync:
+        return GDAsync(density=self.density, engine=self.engine,
+                       quantize=self.quantize)
+
     def init(self, params):
-        return GDAsync(density=self.density).init(params)
+        return self._delegate().init(params)
 
     def step(self, state, grads, lr):
-        return GDAsync(density=self.density).step(state, grads, lr)
+        return self._delegate().step(state, grads, lr)
 
 
 def msgd_step(params, velocity, grads, *, lr: float, momentum: float):
     """Single-node momentum SGD (the paper's MSGD baseline), Eq. (7)."""
-    new_v = jax.tree.map(lambda u, g: momentum * u + lr * g, velocity, grads)
+    new_v = jax.tree.map(
+        lambda u, g: engine_lib.velocity_accumulate(
+            u, g, momentum=momentum, lr=lr),
+        velocity, grads)
     new_p = jax.tree.map(lambda p, u: p - u, params, new_v)
     return new_p, new_v
 

@@ -24,16 +24,22 @@ Three exchange modes, all running inside ``jax.shard_map`` with manual
 All modes consume *per-worker* gradients (computed on the local batch shard)
 and return the aggregated global update (mean over workers), plus new
 persistent exchange state.
+
+Every selection (upward SAMomentum top-k, per-row hinted top-k, downward
+secondary compression) routes through core/engine.py — ``ExchangeConfig``
+names the engine ("auto" dispatches exact vs sampled by tensor size via
+``sampled_threshold_above``) and the wire quantization mode.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import engine as engine_lib
+from .engine import CompressionSpec
 from .sparsify import density_to_k
 
 
@@ -45,9 +51,22 @@ class ExchangeConfig:
     secondary_density: float | None = None  # shardedps downward density;
                                             # default density/W at call site
     bucket_factor: float = 2.0     # all_to_all bucket overprovisioning
-    sampled_threshold_above: int = 1 << 20  # use sampled thr for big leaves
+    engine: str = "auto"           # compression engine (core/engine.py):
+                                   # exact | sampled | blockwise | auto
+    quantize: str = "none"         # wire quantization of message values
+    sampled_threshold_above: int = 1 << 20  # auto engine: sampled thr for
+                                            # leaves/rows at least this big
     wire_dtype: str = "float32"    # collective payload dtype (bf16 halves
                                    # value bytes; §Perf change)
+
+    def spec(self) -> CompressionSpec:
+        """The compression-engine spec every selection in this exchange
+        uses."""
+        return CompressionSpec(
+            engine=self.engine,
+            quantize=self.quantize,
+            sampled_threshold_above=self.sampled_threshold_above,
+        )
 
 
 class ExchangeState(NamedTuple):
@@ -76,18 +95,6 @@ def _shard_size(size: int, n: int) -> int:
     return -(-size // n)  # ceil
 
 
-def _samomentum_leaf(u, g, *, momentum, lr, k):
-    """Fused SAMomentum + top-k on one leaf. Returns (vals, idx, new_u)."""
-    u = momentum * u + lr * g.astype(jnp.float32)
-    flat = u.reshape(-1)
-    _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    idx = idx.astype(jnp.int32)
-    vals = flat[idx]
-    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
-    new_u = jnp.where(mask, flat, flat / momentum).reshape(u.shape)
-    return vals, idx, new_u
-
-
 # ---------------------------------------------------------------------------
 # dense (psum) baseline
 # ---------------------------------------------------------------------------
@@ -100,7 +107,8 @@ def dense_momentum_exchange(state, grads, *, cfg, lr, axis_names):
     """Classic DP baseline: all-reduce mean grads, heavy-ball momentum."""
     g_mean = dense_exchange(grads, axis_names)
     new_u = jax.tree.map(
-        lambda u, g: cfg.momentum * u + lr * g.astype(jnp.float32),
+        lambda u, g: engine_lib.velocity_accumulate(
+            u, g.astype(jnp.float32), momentum=cfg.momentum, lr=lr),
         state.velocity, g_mean)
     return new_u, state._replace(velocity=new_u)
 
@@ -118,14 +126,16 @@ def dense_momentum_exchange(state, grads, *, cfg, lr, axis_names):
 # ---------------------------------------------------------------------------
 
 def _leaf_allgather_hinted(u, g, *, k, shard_axis, momentum, lr, axis_names,
-                           n_workers, wire_dtype="float32"):
+                           n_workers, spec, wire_dtype="float32"):
     """SAMomentum + top-k + sparse all-gather for one leaf.
 
     Returns (update_to_subtract, new_velocity)."""
     if (shard_axis is None or u.ndim == 1) and u.size < (1 << 24):
-        vals, idx, u2 = _samomentum_leaf(u, g, momentum=momentum, lr=lr, k=k)
-        gvals = jax.lax.all_gather(vals, axis_names)       # (W, k)
-        gidx = jax.lax.all_gather(idx, axis_names)
+        msg, u2 = engine_lib.samomentum_step(
+            u, g.astype(jnp.float32), momentum=momentum, lr=lr, k=k,
+            spec=spec)
+        gvals = jax.lax.all_gather(msg.values, axis_names)   # (W, k)
+        gidx = jax.lax.all_gather(msg.indices, axis_names)
         size = int(u.size)
         dense = (jnp.zeros((size,), jnp.float32)
                  .at[gidx.reshape(-1)].add(gvals.reshape(-1)))
@@ -148,13 +158,9 @@ def _leaf_allgather_hinted(u, g, *, k, shard_axis, momentum, lr, axis_names,
     g2d = gm.reshape(S, -1).astype(jnp.float32)
     rest = u2d.shape[1]
     k_row = max(1, min(rest, -(-k // S)))
-    uacc = momentum * u2d + lr * g2d
-    _, idx = jax.lax.top_k(jnp.abs(uacc), k_row)           # (S, k_row)
-    idx = idx.astype(jnp.int32)
+    vals, idx, u_new = engine_lib.samomentum_step_rows(
+        u2d, g2d, momentum=momentum, lr=lr, k=k_row, spec=spec)
     rows_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
-    vals = jnp.take_along_axis(uacc, idx, axis=1)
-    mask = jnp.zeros((S, rest), bool).at[rows_idx, idx].set(True)
-    u_new = jnp.where(mask, uacc, uacc / momentum)
     wdt = jnp.dtype(wire_dtype)
     gvals = jax.lax.all_gather(vals.astype(wdt), axis_names)  # (W, S, k_row)
     gidx = jax.lax.all_gather(idx, axis_names)
@@ -178,6 +184,7 @@ def allgather_exchange(state, grads, *, cfg, lr, axis_names, n_workers,
     subtract from the (replicated-over-data) parameters.  ``shard_axes`` is
     an optional per-leaf list of model-sharded dim indices (see above).
     """
+    spec = cfg.spec()
     u_leaves, treedef = jax.tree.flatten(state.velocity)
     g_leaves = jax.tree.leaves(grads)
     if shard_axes is None:
@@ -187,7 +194,7 @@ def allgather_exchange(state, grads, *, cfg, lr, axis_names, n_workers,
         k = density_to_k(int(u.size), cfg.density)
         up, u2 = _leaf_allgather_hinted(
             u, g, k=k, shard_axis=ax, momentum=cfg.momentum, lr=lr,
-            axis_names=axis_names, n_workers=n_workers,
+            axis_names=axis_names, n_workers=n_workers, spec=spec,
             wire_dtype=cfg.wire_dtype)
         upd.append(up)
         new_u.append(u2)
@@ -196,7 +203,7 @@ def allgather_exchange(state, grads, *, cfg, lr, axis_names, n_workers,
 
 
 def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
-                           axis_names, n_workers):
+                           axis_names, n_workers, spec):
     """Row-wise sharded-PS dual-way exchange for one (model-sharded) leaf.
 
     View: (S, rest) rows with S on the (GSPMD-auto) model axis.  The data
@@ -227,11 +234,10 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
     g2d = gm.reshape(S, rest).astype(jnp.float32)
     shard_rest = -(-rest // W)
     k_row = max(1, min(rest, -(-k // S)))
-    uacc = cfg.momentum * u2d + lr * g2d
-    _, idx = jax.lax.top_k(jnp.abs(uacc), k_row)              # (S, k_row)
-    idx = idx.astype(jnp.int32)
+    uacc = engine_lib.velocity_accumulate(u2d, g2d, momentum=cfg.momentum,
+                                          lr=lr)
+    vals, idx = engine_lib.select_rows(uacc, k_row, spec)    # (S, k_row)
     rows_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
-    vals = jnp.take_along_axis(uacc, idx, axis=1)
     # ---- bucket by owner, per row ----
     owner = idx // shard_rest                                 # (S, k_row)
     cap = max(1, int(round(k_row / W * cfg.bucket_factor)))
@@ -248,10 +254,11 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
         rows_idx, slot].set(jnp.where(ok, vals_s, 0.0))[:, :-1]
     buf_i = jnp.full((S, W * cap + 1), -1, jnp.int32).at[
         rows_idx, slot].set(jnp.where(ok, idx_s % shard_rest, -1))[:, :-1]
-    # SAMomentum rescale: only actually-shipped coords keep u
+    # SAMomentum rescale: only actually-shipped coords keep u (bucket
+    # overflow is NOT shipped — its mass must stay in the velocity)
     shipped = jnp.zeros((S, rest + 1), bool).at[
         rows_idx, jnp.where(ok, idx_s, rest)].set(True)[:, :-1]
-    u_new = jnp.where(shipped, uacc, uacc / cfg.momentum)
+    u_new = engine_lib.samomentum_rescale(uacc, shipped, cfg.momentum)
     # ---- all_to_all: (S, W, cap) -> (W, S, cap) ----
     wdt = jnp.dtype(cfg.wire_dtype)
     send_v = jnp.moveaxis(buf_v.reshape(S, W, cap), 1, 0)
@@ -274,9 +281,7 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
     k2 = max(1, min(shard_rest,
                     int(round(k_row / W)) if cfg.secondary_density is None
                     else density_to_k(shard_rest, cfg.secondary_density)))
-    _, didx = jax.lax.top_k(jnp.abs(diff), k2)                # (S, k2)
-    didx = didx.astype(jnp.int32)
-    dvals = jnp.take_along_axis(diff, didx, axis=1)
+    dvals, didx = engine_lib.select_rows(diff, k2, spec)      # (S, k2)
     v_new = v2d.at[rows_idx, didx].add(dvals)
     me = _linear_index(
         (axis_names,) if isinstance(axis_names, str) else tuple(axis_names))
@@ -330,6 +335,7 @@ def shardedps_exchange(
 ):
     """Dual-way sparse exchange against a parameter server sharded over the
     data axis — per-leaf dispatch to the row-wise implementation above."""
+    spec = cfg.spec()
     u_leaves, treedef = jax.tree.flatten(state.velocity)
     m_leaves = jax.tree.leaves(state.m_shard)
     v_leaves = jax.tree.leaves(state.v_shard)
@@ -342,7 +348,7 @@ def shardedps_exchange(
         k = density_to_k(int(u.size), cfg.density)
         up, u2, m2, v2 = _leaf_shardedps_hinted(
             u, g, m_sh, v_sh, k=k, shard_axis=ax, cfg=cfg, lr=lr,
-            axis_names=axis_names, n_workers=n_workers)
+            axis_names=axis_names, n_workers=n_workers, spec=spec)
         upd.append(up)
         new_u.append(u2)
         new_m.append(m2)

@@ -21,6 +21,10 @@ tests/test_samomentum.py.
 
 No residual buffer exists (contrast DGC): the velocity itself carries the
 unsent mass. This halves optimizer memory vs momentum-corrected DGC.
+
+The accumulate/select/rescale operator itself lives in core/engine.py (one
+implementation behind every DGS path); this module is the pytree-shaped
+optimizer face of it.
 """
 from __future__ import annotations
 
@@ -29,7 +33,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .sparsify import SparseLeaf, density_to_k, topk_select
+from . import engine
+from .engine import CompressionSpec
+from .sparsify import density_to_k
 
 
 class SAMomentumState(NamedTuple):
@@ -47,21 +53,17 @@ def leaf_update(
     momentum: float,
     lr: float,
     k: int,
+    spec: CompressionSpec = engine.EXACT_SPEC,
 ):
     """Single-tensor SAMomentum step. Returns (msg: SparseLeaf, u_new)."""
-    u = momentum * u_prev + lr * grad
-    flat = u.reshape(-1)
-    msg = topk_select(flat, k)
-    mask = jnp.zeros(flat.shape, dtype=bool).at[msg.indices].set(True)
-    # Alg.3 line 11:  u += (1/m - 1) * u .* !mask   <=>  unsent /= m
-    u_new = jnp.where(mask, flat, flat / momentum).reshape(u.shape)
-    return msg, u_new
+    return engine.samomentum_step(
+        u_prev, grad, momentum=momentum, lr=lr, k=k, spec=spec)
 
 
 def leaf_update_dense(u_prev, grad, *, momentum, lr):
     """Degenerate density=1 case: every coordinate is sent each step, so
     SAMomentum is exactly heavy-ball momentum (paper Eq. 7/8)."""
-    u = momentum * u_prev + lr * grad
+    u = engine.velocity_accumulate(u_prev, grad, momentum=momentum, lr=lr)
     return u, u
 
 
@@ -72,6 +74,7 @@ def tree_update(
     momentum: float,
     lr: float,
     density: float,
+    spec: CompressionSpec = engine.EXACT_SPEC,
 ):
     """Per-leaf SAMomentum over a gradient pytree.
 
@@ -82,7 +85,8 @@ def tree_update(
     msgs, new_u = [], []
     for u_prev, g in zip(u_leaves, g_leaves):
         k = density_to_k(int(u_prev.size), density)
-        msg, u = leaf_update(u_prev, g, momentum=momentum, lr=lr, k=k)
+        msg, u = leaf_update(u_prev, g, momentum=momentum, lr=lr, k=k,
+                             spec=spec)
         msgs.append(msg)
         new_u.append(u)
     return msgs, SAMomentumState(velocity=jax.tree.unflatten(treedef, new_u))

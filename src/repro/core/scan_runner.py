@@ -12,8 +12,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import engine as engine_lib
 from . import server as ps
 from .baselines import Strategy
+from .engine import CompressionSpec
 
 
 def run_async_scan(
@@ -26,6 +28,7 @@ def run_async_scan(
     n_workers: int,
     lr: float,
     secondary_density: float | None = None,
+    secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC,
 ):
     """Run the whole schedule in one jitted scan.
 
@@ -48,7 +51,8 @@ def run_async_scan(
         loss, grads = grad_fn(params_k, batch)
         strat_k, msg = strategy.step(strat_k, grads, lr)
         sstate = ps.receive(sstate, msg)
-        sstate, G = ps.send(sstate, k, secondary_density=secondary_density)
+        sstate, G = ps.send(sstate, k, secondary_density=secondary_density,
+                            spec=secondary_spec)
         params_k = ps.apply_to_params(params_k, G)
         wp = jax.tree.map(lambda x, v: x.at[k].set(v), wp, params_k)
         ws = jax.tree.map(lambda x, v: x.at[k].set(v), ws, strat_k)

@@ -24,11 +24,12 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import engine as engine_lib
+from .engine import CompressionSpec
 from .sparsify import (
     SparseLeaf,
     density_to_k,
     sparse_accumulate,
-    topk_select,
 )
 
 
@@ -61,13 +62,15 @@ def send(
     worker_id,
     *,
     secondary_density: float | None = None,
+    spec: CompressionSpec = engine_lib.EXACT_SPEC,
 ):
     """Produce the model-difference message G_k for ``worker_id``.
 
     Returns (new_state, G) where G is a list of dense flat arrays (no
     secondary compression — G is *implicitly* sparse, we account its true nnz
     for communication metrics) or a list of SparseLeaf (secondary
-    compression, Alg. 2 lines 5-11).
+    compression, Alg. 2 lines 5-11, selected through the compression engine
+    named by ``spec``).
     """
     new_v, G = [], []
     for M_leaf, v_leaf in zip(state.M, state.v):
@@ -77,7 +80,7 @@ def send(
             new_v.append(v_leaf.at[worker_id].set(M_leaf))
         else:
             k = density_to_k(int(diff.shape[0]), secondary_density)
-            msg = topk_select(diff, k)
+            msg = engine_lib.select(diff, k, spec)
             G.append(msg)
             new_v.append(
                 v_leaf.at[worker_id].set(sparse_accumulate(v_leaf[worker_id], msg))

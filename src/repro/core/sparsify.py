@@ -6,14 +6,20 @@ the same operator as a static ``k = max(1, round(density * size))`` per tensor
 and exchange fixed-size ``(values, indices)`` pairs — the static-shape COO of
 DESIGN.md §3.
 
-Two threshold engines are provided:
+Two selection primitives live here and are composed into the pluggable
+engines of ``core/engine.py`` (DESIGN.md §Compression-engine) — call sites
+should go through the engine layer rather than these directly:
 
-* ``topk_select`` — exact ``lax.top_k`` over |x| (used everywhere at small and
-  medium sizes, and by the reference oracles).
-* ``sampled_threshold`` / ``threshold_select`` — DGC-style sampled threshold
-  estimation for very large tensors, where an exact top-k of a 100M-element
-  gradient would dominate step time.  The sampled threshold selects
-  *approximately* k elements; callers re-pad/truncate to exactly k.
+* ``topk_select`` — exact ``lax.top_k`` over |x| (the ``exact`` engine and
+  the reference oracles).
+* ``sampled_threshold`` — DGC-style sampled threshold estimation (the
+  ``sampled`` engine's estimator) for very large tensors, where an exact
+  top-k of a 100M-element gradient would dominate step time.  The live
+  selection against the estimate is ``engine._threshold_compact_rows``
+  (sort-free compaction + candidate top-k); ``threshold_select`` here is
+  the magnitude-keyed *reference* selector for threshold-based selection
+  (full-width keyed top_k, support provably identical to exact top-k) kept
+  as the semantics oracle it is tested against.
 """
 from __future__ import annotations
 
@@ -68,9 +74,15 @@ def topk_mask(x: jax.Array, k: int) -> jax.Array:
 
 
 def sparse_to_dense(leaf: SparseLeaf) -> jax.Array:
-    """Decode a SparseLeaf back into a flat dense vector (scatter)."""
+    """Decode a SparseLeaf back into a flat dense vector (scatter).
+
+    Duplicate indices ACCUMULATE (matching the server's receive path): the
+    sampled engine pads underfull messages with zero-valued duplicates of
+    an already-shipped index, which must decode as a no-op — a ``.set``
+    scatter would nondeterministically overwrite the real value.
+    """
     out = jnp.zeros((leaf.size,), dtype=leaf.values.dtype)
-    return out.at[leaf.indices].set(leaf.values)
+    return out.at[leaf.indices].add(leaf.values)
 
 
 def sparse_accumulate(dense_flat: jax.Array, leaf: SparseLeaf) -> jax.Array:
@@ -206,18 +218,11 @@ def quantize_dequantize(values: jax.Array, mode: str):
         q = jnp.clip(jnp.round(values / scale), -127, 127)
         return (q * scale).astype(jnp.float32), 8
     if mode == "tern":
-        scale = jnp.mean(jnp.abs(values))
+        # scale over NONZERO entries only: exact zeros are either genuine
+        # (nothing to ship) or the sampled engine's decode-neutral padding,
+        # and averaging them in would dilute the shared magnitude of every
+        # real value with no error compensation; sign(0) keeps them 0
+        nnz = jnp.maximum(jnp.sum(values != 0.0), 1)
+        scale = jnp.sum(jnp.abs(values)) / nnz
         return (jnp.sign(values) * scale).astype(jnp.float32), 2
     raise ValueError(f"unknown quantization mode {mode!r}")
-
-
-def quantize_msgs(msgs, mode: str):
-    """Apply wire quantization to a list of SparseLeaf messages."""
-    if mode == "none":
-        return msgs, 32
-    out = []
-    bits = 32
-    for m in msgs:
-        vq, bits = quantize_dequantize(m.values, mode)
-        out.append(SparseLeaf(values=vq, indices=m.indices, size=m.size))
-    return out, bits

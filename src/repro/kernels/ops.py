@@ -67,7 +67,11 @@ def hierarchical_topk(x, *, k: int, r: int | None = None,
     vals, gidx = block_topk_candidates(x, r=r, interpret=interpret)
     cvals = vals.reshape(-1)
     cidx = gidx.reshape(-1)
-    _, sel = jax.lax.top_k(jnp.abs(cvals), min(k, cvals.shape[0]))
+    # padding candidates (index >= x.size, |x| = 0) rank strictly below every
+    # real candidate, so they can only be selected when k exceeds the number
+    # of real candidates
+    mag = jnp.where(cidx < x.size, jnp.abs(cvals), -1.0)
+    _, sel = jax.lax.top_k(mag, min(k, cvals.shape[0]))
     return cvals[sel], cidx[sel]
 
 

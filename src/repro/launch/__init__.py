@@ -1,3 +1,5 @@
+from repro import compat  # noqa: F401  (jax version backfills, side effects)
+
 from . import mesh, roofline, sharding, steps
 
 __all__ = ["mesh", "roofline", "sharding", "steps"]

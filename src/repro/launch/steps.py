@@ -5,7 +5,8 @@ train_step topology (DESIGN.md §4):
     jit (GSPMD over "model")
      └─ shard_map  manual=("pod","data")  auto={"model"}
          ├─ per-worker grads on the local batch shard
-         ├─ DGS exchange: SAMomentum -> top-k -> sparse collective
+         ├─ DGS exchange: SAMomentum -> engine top-k -> sparse collective
+         │  (engine + quantize chosen by ExchangeConfig, core/engine.py)
          └─ pmean loss
      └─ params <- params - updates        (back under GSPMD)
 
@@ -93,6 +94,9 @@ class StepBundle:
 def build_train_step(cfg: mcfg.ModelConfig, mesh, ex_cfg: ExchangeConfig,
                      *, lr: float = 1e-2, batch_specs_abstract=None,
                      remat: bool = True) -> StepBundle:
+    if ex_cfg.engine != "auto":
+        from repro.core.engine import get_engine
+        get_engine(ex_cfg.engine)  # fail fast at build time, not in-jit
     data_axes = mesh_lib.data_axis_names(mesh)
     W = mesh_lib.n_data_workers(mesh)
     msize = mesh_lib.model_axis_size(mesh)

@@ -27,6 +27,15 @@ def main():
                     choices=["dense", "allgather", "shardedps"])
     ap.add_argument("--density", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "exact", "sampled", "blockwise"],
+                    help="top-k compression engine (core/engine.py)")
+    ap.add_argument("--quantize", default="none",
+                    choices=["none", "bf16", "int8", "tern"],
+                    help="wire quantization of sparse message values")
+    ap.add_argument("--sampled-above", type=int, default=1 << 20,
+                    help="auto engine: sampled threshold for leaves/rows "
+                         "with at least this many elements")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--devices", type=int, default=8,
                     help="host device override for the smoke mesh")
@@ -51,18 +60,26 @@ def main():
     from repro.launch.steps import build_train_step, zeros_state
     from repro.models import init_params
 
+    from repro.compat import supports_partial_auto_shard_map
+
     cfg = get_arch(args.arch).reduced()
     n_dev = jax.device_count()
     model_par = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
+    if not supports_partial_auto_shard_map():
+        # train data-parallel only; model parallelism needs jax >= 0.5
+        model_par = 1
     mesh = mesh_lib.make_mesh((n_dev // model_par, model_par),
                               ("data", "model"))
     W = n_dev // model_par
     print(f"[train] arch={cfg.name} mesh={dict(mesh.shape)} mode={args.mode} "
-          f"density={args.density}")
+          f"density={args.density} engine={args.engine} "
+          f"quantize={args.quantize}")
 
     shape = InputShape("smoke", args.seq, args.batch, "train")
     ex_cfg = ExchangeConfig(mode=args.mode, density=args.density,
-                            momentum=args.momentum)
+                            momentum=args.momentum, engine=args.engine,
+                            quantize=args.quantize,
+                            sampled_threshold_above=args.sampled_above)
     bundle = build_train_step(cfg, mesh, ex_cfg, lr=args.lr,
                               batch_specs_abstract=input_specs(cfg, shape),
                               remat=False)

@@ -71,6 +71,71 @@ def test_mesh_allgather_matches_flat_reference():
     assert "MATCH" in out
 
 
+def test_mesh_allgather_auto_engine_dispatch_matches_exact():
+    """engine="auto" with sampled_threshold_above=1 forces every leaf
+    through the SAMPLED engine; the aggregated update must still match the
+    exact engine (the sampled threshold only skips the sort, the selected
+    support is identical) — behavioural proof the ExchangeConfig knob is
+    respected on the mesh path."""
+    out = _run("""
+        from repro.core import distributed as D
+        from repro.launch import mesh as mesh_lib
+
+        W = 4
+        mesh = mesh_lib.make_mesh((W,), ("data",))
+        n = 256
+        key = jax.random.PRNGKey(7)
+        grads_w = jax.random.normal(key, (W, n))
+        u0 = jnp.zeros((W, n))
+
+        def run_with(cfg):
+            def inner(u, g):
+                upd, st = D.allgather_exchange(
+                    D.ExchangeState(velocity=[u[0]], m_shard=[], v_shard=[]),
+                    [g[0]], cfg=cfg, lr=0.1, axis_names=("data",),
+                    n_workers=W)
+                return upd[0], st.velocity[0][None]
+            return jax.shard_map(
+                inner, mesh=mesh, axis_names={"data"},
+                in_specs=(P("data"), P("data")), out_specs=(P(), P("data")),
+                check_vma=False)(u0, grads_w)
+
+        upd_e, u_e = run_with(D.ExchangeConfig(
+            mode="allgather", density=0.1, momentum=0.5, engine="exact"))
+        # auto below the cutoff == exact, bit for bit
+        upd_a, u_a = run_with(D.ExchangeConfig(
+            mode="allgather", density=0.1, momentum=0.5, engine="auto",
+            sampled_threshold_above=1 << 30))
+        np.testing.assert_array_equal(np.asarray(upd_a), np.asarray(upd_e))
+        np.testing.assert_array_equal(np.asarray(u_a), np.asarray(u_e))
+        # auto above the cutoff routes through the (approximate, sort-free)
+        # sampled engine: still <= W*k shipped slots and most of the exact
+        # update's mass recovered
+        upd_s, u_s = run_with(D.ExchangeConfig(
+            mode="allgather", density=0.1, momentum=0.5, engine="auto",
+            sampled_threshold_above=1))
+        upd_s = np.asarray(upd_s)
+        k = max(1, round(0.1 * n))
+        assert np.count_nonzero(upd_s) <= W * k
+        mass_s = np.abs(upd_s).sum()
+        mass_e = np.abs(np.asarray(upd_e)).sum()
+        assert mass_s > 0.5 * mass_e, (mass_s, mass_e)
+        assert np.all(np.isfinite(np.asarray(u_s)))
+        print("AUTO_DISPATCH_MATCH")
+    """, devices=4)
+    assert "AUTO_DISPATCH_MATCH" in out
+
+
+def _supports_partial_auto() -> bool:
+    from repro.compat import supports_partial_auto_shard_map
+    return supports_partial_auto_shard_map()
+
+
+@pytest.mark.skipif(
+    not _supports_partial_auto(),
+    reason="partial-auto shard_map (manual data + auto model axis of size "
+           ">1) crashes the XLA SPMD partitioner on jax 0.4.x; "
+           "model_par=1 paths are covered by the other mesh tests")
 def test_mesh_train_step_loss_decreases():
     """End-to-end: reduced arch trains on a (4 data x 2 model) mesh with the
     sparse exchange and the loss goes down."""

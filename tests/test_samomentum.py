@@ -3,7 +3,7 @@ equivalence theorem (sparsification == per-parameter enlarged batch)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import samomentum
 
