@@ -37,6 +37,19 @@ def run(quick: bool = False):
         measured[tag] = per_iter
         rows.append(csv_row(f"fig4/bytes/{tag}", dt / n_events * 1e6,
                             f"bytes_per_iter={per_iter:.0f}"))
+    # measured-wire rows: per-iteration serialized frame bytes of the
+    # cluster codec (headers, scales, bit-packed values) per quantize mode
+    # — what a real TCP run of launch/cluster.py moves per event
+    for mode in ("bf16", "int8", "tern"):
+        _, hist, _ = run_strategy(
+            "dgs", params0, grad_fn, batch_fn, n_workers=8,
+            n_events=n_events, lr=0.08, density=0.01, momentum=0.7,
+            secondary_density=0.01, seed=4, quantize=mode)
+        rows.append(csv_row(
+            f"fig4/wire/dgs+2nd/{mode}", 0.0,
+            f"up_per_iter={hist.up_bytes / n_events:.0f};"
+            f"down_per_iter={hist.down_bytes / n_events:.0f}"))
+
     # analytic scale-up: ResNet-18-sized model (11.7M params), fp32
     scale = 11.7e6 / n_params
     t_compute = 0.118  # s/iter on K80 (paper: 50 epochs/88min incl. comm)

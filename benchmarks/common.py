@@ -142,7 +142,7 @@ def make_copy_problem(seed=0, vocab=32, hidden=64, copy_len=6, delay=6,
 
 def run_strategy(name, params0, grad_fn, batch_fn, *, n_workers, n_events,
                  lr, density=0.01, momentum=0.7, seed=0, hetero=0.8,
-                 lr_fn=None, secondary_density=None):
+                 lr_fn=None, secondary_density=None, quantize="none"):
     """Run one strategy on the async cluster; returns (final, hist, dt)."""
     if name == "msgd":
         batches = [batch_fn(e, 0) for e in range(n_events)]
@@ -158,6 +158,7 @@ def run_strategy(name, params0, grad_fn, batch_fn, *, n_workers, n_events,
     kw = {}
     if name != "asgd":
         kw["density"] = density
+        kw["quantize"] = quantize
     if name in ("dgc_async", "dgs"):
         kw["momentum"] = momentum
     strat = make_strategy(name, **kw)

@@ -1,0 +1,96 @@
+"""Federated quickstart: heterogeneous clients, non-IID data, real wire.
+
+    PYTHONPATH=src python examples/federated_noniid.py
+
+An in-process cluster (coordinator + client threads over the packed wire
+codec) trains an MLP at 95% gradient sparsity under the federated
+conditions the single-process simulator cannot express:
+
+* labels sharded non-IID across clients (Dirichlet alpha=0.3),
+* 80% per-round partial participation,
+* one straggler on a 100 KB/s uplink, one late joiner, one early leaver,
+* int8-quantized upward values, secondary-compressed downloads.
+
+Printed up/down numbers are measured wire bytes (headers, scales and
+bit-packed values included), not an analytic formula.
+
+For a true multi-process run over TCP sockets:
+
+    PYTHONPATH=src python -m repro.launch.cluster --clients 4 --alpha 0.3
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import run_inprocess
+from repro.cluster.scenarios import NonIIDClassification, hetero_plans
+from repro.core import make_strategy
+from repro.data.synthetic import ClassificationTask
+
+N_CLIENTS, N_ROUNDS = 6, 30
+
+task = ClassificationTask(n_features=64, n_classes=10, batch_size=32,
+                          noise=0.8, seed=0)
+data = NonIIDClassification(task=task, alpha=0.3, n_clients=N_CLIENTS)
+
+
+def init_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (64, 64)) * 0.18,
+        "b1": jnp.zeros((64,)),
+        "w2": jax.random.normal(k2, (64, 10)) * 0.18,
+        "b2": jnp.zeros((10,)),
+    }
+
+
+def apply(p, x):
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def grad_fn(p, batch):
+    x, y = batch
+
+    def loss(p):
+        lp = jax.nn.log_softmax(apply(p, x))
+        return -jnp.mean(lp[jnp.arange(x.shape[0]), y])
+
+    return jax.value_and_grad(loss)(p)
+
+
+def accuracy(p):
+    x, y = data.eval_set(1024)
+    return float(jnp.mean(jnp.argmax(apply(p, x), -1) == y))
+
+
+def main():
+    plans = hetero_plans(N_CLIENTS, N_ROUNDS, hetero=0.8, seed=1,
+                         participation=0.8, late_join=1, early_leave=1)
+    # client 0 is additionally stuck behind a 100 KB/s uplink
+    plans[0] = dataclasses.replace(plans[0], bandwidth=100e3)
+
+    final, hist = run_inprocess(
+        make_strategy("dgs", density=0.05, momentum=0.7, quantize="int8"),
+        grad_fn,
+        init_params(jax.random.PRNGKey(0)),
+        lambda e, k: data.batch(int(e), int(k) % N_CLIENTS),
+        plans=plans,
+        lr=0.1,
+        secondary_density=0.05,
+        inject_faults=True,
+    )
+    n = max(1, len(hist.losses))
+    print(f"{n} federated rounds served "
+          f"(partial participation thins {N_CLIENTS * N_ROUNDS} slots)")
+    print(f"loss {hist.losses[:5].mean():.3f} -> {hist.losses[-5:].mean():.3f}"
+          f"  acc={accuracy(final):.3f}")
+    print(f"measured wire: up={hist.up_bytes / 1e3:.1f}KB "
+          f"({hist.up_bytes / n:.0f}B/round)  "
+          f"down={hist.down_bytes / 1e3:.1f}KB "
+          f"({hist.down_bytes / n:.0f}B/round)")
+    print(f"mean staleness {hist.staleness.mean():.1f} events")
+
+
+if __name__ == "__main__":
+    main()

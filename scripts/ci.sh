@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# Fast CI path: fail on the first broken test, quiet output.
+# Fast CI path: fail on the first broken test, quiet output, then the
+# timeout-guarded multiprocess socket smoke (the TCP cluster path must not
+# rot off-TPU: coordinator + 2 client processes over real sockets).
 # Full tier-1 sweep (no -x) is what .github/workflows/ci.yml runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -x "$@"
+python -m pytest -q -x "$@"
+timeout 300 python -m repro.launch.cluster --smoke

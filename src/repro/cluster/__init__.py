@@ -1,0 +1,29 @@
+"""repro.cluster — the federated client/coordinator runtime.
+
+Submodules (imported lazily to keep ``repro.core`` <-> ``repro.cluster``
+dependencies one-directional at import time; ``core.async_sim`` pulls in
+``cluster.wire`` inside functions only):
+
+* ``wire``        — packed binary codec + measured byte accounting
+* ``transport``   — Transport protocol: in-process hub, TCP sockets
+* ``coordinator`` — the parameter-server side of the async loop
+* ``client``      — the worker side
+* ``scenarios``   — federated knobs: plans, participation, Dirichlet shards
+* ``runner``      — assemble coordinator + clients in one process
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("wire", "transport", "coordinator", "client", "scenarios",
+               "runner")
+
+__all__ = list(_SUBMODULES) + ["run_inprocess"]
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    if name == "run_inprocess":
+        return importlib.import_module(".runner", __name__).run_inprocess
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,105 @@
+"""The federated client: local compute on a stale model, sparse exchange.
+
+Runs the SAME jitted compute/apply stages as the simulator
+(``async_sim.make_client_step`` / ``make_apply``); the upward message
+leaves the jit raw and the wire codec quantizes it during encode, exactly
+as ``AsyncTrainer`` does in-process via ``wire.quantize_message``.
+
+Scenario behaviour lives here too: per-round participation (SKIP frames),
+bounded life (BYE after ``plan.n_rounds``), and at-least-once retry — a
+frame lost to fault injection is retransmitted after ``reply_timeout`` and
+deduplicated by the coordinator on ``seq``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core import async_sim
+from repro.core.baselines import Strategy
+
+from . import wire
+from .scenarios import ClientPlan, participates
+from .transport import RecvTimeout
+
+
+@dataclasses.dataclass
+class ClusterClient:
+    """One worker process/thread speaking the cluster wire protocol.
+
+    batch_fn(event_idx, slot) -> batch; ``event_fn(local_step) -> int``
+    maps local steps to the event index fed to batch_fn/lr_fn — in
+    schedule-driven (parity) runs this is the client's slice of the global
+    schedule, otherwise the local step count.
+    """
+
+    transport: Any
+    strategy: Strategy
+    grad_fn: Callable
+    params0: Any
+    batch_fn: Callable
+    plan: ClientPlan
+    lr: float = 0.1
+    lr_fn: Callable | None = None
+    event_fn: Callable | None = None
+    reply_timeout: float | None = None   # retransmit interval under drops
+    max_retries: int = 50
+
+    def run(self):
+        """HELLO -> (UP/DOWN | SKIP)* -> BYE; returns local History-lite."""
+        addr = self.plan.client_id
+        client_step = async_sim.make_client_step(self.strategy, self.grad_fn)
+        apply_G = async_sim.make_apply()
+        up_mode = self.strategy.quantize
+
+        hello, _ = wire.encode_message(wire.HELLO, addr,
+                                       self._proposed_slot())
+        self.transport.send(wire.COORDINATOR_ID, hello)
+        _, reply = self.transport.recv(timeout=None)
+        welcome = wire.decode_message(reply)
+        assert welcome.type == wire.WELCOME, welcome.type
+        slot = welcome.seq
+
+        params = self.params0
+        strat = self.strategy.init(self.params0)
+        losses, seq = [], 0
+        for step in range(self.plan.n_rounds):
+            if not participates(self.plan, step):
+                skip, _ = wire.encode_message(wire.SKIP, addr, seq)
+                self.transport.send(wire.COORDINATOR_ID, skip)
+                continue
+            e = step if self.event_fn is None else int(self.event_fn(step))
+            lr = self.lr if self.lr_fn is None else float(self.lr_fn(e))
+            batch = self.batch_fn(e, slot)
+            strat, loss, msg = client_step(params, strat, batch, lr)
+            payload, _ = wire.encode_message(
+                wire.UP, addr, seq, msg, mode=up_mode, aux=float(loss))
+            down = self._exchange(payload, seq)
+            params = apply_G(params, down.leaves)
+            losses.append(float(loss))
+            seq += 1
+        bye, _ = wire.encode_message(wire.BYE, addr, seq)
+        self.transport.send(wire.COORDINATOR_ID, bye)
+        return params, losses
+
+    def _proposed_slot(self) -> int:
+        # schedule-driven runs pin client addr == worker slot; elastic
+        # scenarios let the coordinator pick (AUTO via 0xFFFFFFFF)
+        return self.plan.client_id if self.event_fn is not None \
+            else 0xFFFFFFFF
+
+    def _exchange(self, payload: bytes, seq: int) -> wire.Message:
+        """Send one UP and wait for its DOWN, retransmitting on loss."""
+        self.transport.send(wire.COORDINATOR_ID, payload)
+        for _ in range(self.max_retries):
+            try:
+                _, reply = self.transport.recv(timeout=self.reply_timeout)
+            except RecvTimeout:
+                self.transport.send(wire.COORDINATOR_ID, payload)
+                continue
+            down = wire.decode_message(reply)
+            if down.type == wire.DOWN and down.seq == seq:
+                return down
+            # stale duplicate reply from an earlier retransmit — ignore
+        raise RecvTimeout(f"client {self.plan.client_id}: no reply to "
+                          f"seq {seq} after {self.max_retries} retries")

@@ -1,0 +1,221 @@
+"""The coordinator: core/server.py's model-difference state behind a wire.
+
+One asynchronous PS loop over any :mod:`repro.cluster.transport` backend.
+Per upward message the coordinator runs the SAME jitted server stages as
+``async_sim.AsyncTrainer`` (``make_server_step`` / ``make_commit``), with
+the wire codec between them:
+
+    UP frame  -> decode -> receive + send_select (jit)
+              -> encode DOWN (codec quantizes values in-flight)
+              -> send_commit with the codec's *shipped* leaves
+              -> DOWN frame
+
+so the server's v_k always tracks exactly the bits the client decoded, and
+a schedule-driven run reproduces the simulator bit-for-bit.
+
+Federated behaviours:
+
+* elastic membership — HELLO assigns a worker slot (reusing freed slots,
+  growing ``v`` via ``ps.add_worker`` when none are free); BYE zeroes the
+  slot for the next joiner.
+* partial participation — SKIP frames advance a client's virtual clock
+  without touching server state.
+* at-least-once delivery — duplicate UP ``seq`` numbers (client retries
+  after a dropped frame) are answered from a per-client reply cache
+  without re-applying the gradient.
+* measured bytes — ``History.up_bytes``/``down_bytes`` are the actual
+  serialized frame sizes moved through the transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import async_sim, engine as engine_lib
+from repro.core import server as ps
+from repro.core.engine import CompressionSpec
+
+from . import wire
+from .transport import RecvTimeout
+
+AUTO_SLOT = 0xFFFFFFFF
+
+
+@dataclasses.dataclass
+class Coordinator:
+    """Parameter-server side of the cluster runtime."""
+
+    transport: Any
+    params0: Any
+    n_slots: int
+    secondary_density: float | None = None
+    secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC
+    scheduler: Any = None              # ScheduleDriven | VirtualClock | None
+    virtual_costs: dict | None = None  # client -> FaultPolicy (virtual time)
+    recv_timeout: float | None = None
+
+    def __post_init__(self):
+        self.sstate = ps.init(self.params0, self.n_slots)
+        self._server_step = async_sim.make_server_step(
+            self.secondary_density, self.secondary_spec)
+        self._commit = async_sim.make_commit()
+        self._down_mode = self.secondary_spec.quantize
+        self._free = list(range(self.n_slots))
+        self._slot_of: dict[int, int] = {}
+        self._last_seq: dict[int, int] = {}
+        self._reply_cache: dict[int, bytes] = {}
+        self._joined: set[int] = set()
+        self._left: set[int] = set()
+        self._losses: list[float] = []
+        self._served_slots: list[int] = []
+        self._staleness: list[int] = []
+        self._last_sync: dict[int, int] = {}
+        self.up_bytes = 0
+        self.down_bytes = 0
+
+    # -- membership --------------------------------------------------------
+
+    def _attach(self, client: int, proposed: int) -> int:
+        if proposed != AUTO_SLOT and proposed in self._free:
+            self._free.remove(proposed)
+            slot = proposed
+        elif self._free:
+            slot = self._free.pop(0)
+        else:
+            self.sstate, slot = ps.add_worker(self.sstate)
+            # v grew a row: the jitted server stages specialize on shapes,
+            # so they recompile on the next event — correctness unaffected
+        self._slot_of[client] = slot
+        self._last_seq[client] = -1
+        self._joined.add(client)
+        self._last_sync.setdefault(slot, 0)
+        return slot
+
+    def _detach(self, client: int):
+        slot = self._slot_of.pop(client, None)
+        if slot is not None:
+            self.sstate = ps.reset_worker(self.sstate, slot)
+            self._free.append(slot)
+            self._last_sync.pop(slot, None)
+        self._left.add(client)
+        if self.scheduler is not None:
+            self.scheduler.deactivate(client)
+
+    # -- one message -------------------------------------------------------
+
+    def _handle(self, src: int, payload: bytes) -> str:
+        try:
+            msg = wire.decode_message(payload)
+        except Exception:
+            if self.scheduler is not None:
+                raise   # trusted in-process peers: corruption is a bug
+            return "ignored"   # TCP: drop the malformed frame, keep serving
+        if msg.type == wire.HELLO:
+            slot = self._attach(src, msg.seq)
+            reply, _ = wire.encode_message(
+                wire.WELCOME, wire.COORDINATOR_ID, slot)
+            self.transport.send(src, reply)
+            return "hello"
+        if msg.type == wire.SKIP:
+            self._account(src, 0)
+            return "skip"
+        if msg.type == wire.BYE:
+            self._detach(src)
+            return "bye"
+        if msg.type != wire.UP:
+            raise ValueError(f"unexpected {wire.TYPE_NAMES[msg.type]}")
+        if src not in self._slot_of:
+            # UP without a completed HELLO (restarted or foreign peer):
+            # reject the frame, not the whole run
+            return "ignored"
+
+        if msg.seq <= self._last_seq.get(src, -1):
+            # duplicate after a dropped reply: answer from cache, do NOT
+            # re-apply the gradient (at-least-once -> exactly-once)
+            cached = self._reply_cache.get(src)
+            if cached is not None:
+                self.transport.send(src, cached)
+            return "dup"
+
+        slot = self._slot_of[src]
+        self.up_bytes += len(payload)
+        e = len(self._losses)
+        self._losses.append(float(np.float32(msg.aux)))
+        self._served_slots.append(slot)
+        self._staleness.append(e - self._last_sync.get(slot, 0))
+        self._last_sync[slot] = e + 1
+
+        self.sstate, G_raw = self._server_step(
+            self.sstate, msg.leaves, jnp.int32(slot))
+        reply, shipped = wire.encode_message(
+            wire.DOWN, wire.COORDINATOR_ID, msg.seq, G_raw,
+            mode=self._down_mode)
+        self.sstate = self._commit(self.sstate, jnp.int32(slot), shipped)
+        self.down_bytes += len(reply)
+        self._last_seq[src] = msg.seq
+        self._reply_cache[src] = reply
+        self.transport.send(src, reply)
+        self._account(src, len(payload) + len(reply))
+        return "up"
+
+    def _account(self, client: int, nbytes: int):
+        if self.scheduler is None:
+            return
+        cost = 0.0
+        if self.virtual_costs and client in self.virtual_costs and nbytes:
+            cost = self.virtual_costs[client].frame_cost(nbytes)
+        self.scheduler.account(client, cost)
+
+    # -- the loop ----------------------------------------------------------
+
+    def serve(self, max_events: int | None = None):
+        """Run until the schedule is exhausted / every client left.
+
+        With a scheduler, each turn serves the scheduler's chosen client
+        (selective receive — arrival order cannot change the served order).
+        Without one (real-time TCP mode) messages are served as they come.
+        """
+        events = 0
+        while max_events is None or events < max_events:
+            who = None
+            if self.scheduler is not None:
+                who = self.scheduler.next_client()
+                if who is None:
+                    break
+            # a turn absorbs control traffic until it yields at most one UP
+            while True:
+                try:
+                    src, payload = self.transport.recv(
+                        who, timeout=self.recv_timeout)
+                except RecvTimeout:
+                    if self.scheduler is None and self._all_done():
+                        return self._finish()
+                    raise
+                kind = self._handle(src, payload)
+                if kind == "up":
+                    events += 1
+                    break
+                if kind in ("skip", "bye"):
+                    break
+                # hello/dup: keep this turn open
+            if self.scheduler is None and self._all_done():
+                break
+        return self._finish()
+
+    def _all_done(self) -> bool:
+        return bool(self._joined) and self._joined <= self._left
+
+    def _finish(self):
+        final = ps.global_model(self.params0, self.sstate)
+        hist = async_sim.History(
+            losses=np.asarray(self._losses, np.float64),
+            worker_ids=np.asarray(self._served_slots, np.int32),
+            staleness=np.asarray(self._staleness, np.int64),
+            up_bytes=self.up_bytes,
+            down_bytes=self.down_bytes,
+            evals=[],
+        )
+        return final, hist

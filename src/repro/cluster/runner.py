@@ -1,0 +1,134 @@
+"""Assemble a whole cluster in one process (threads over InProcHub).
+
+Two entry points:
+
+* :func:`run_inprocess` with ``schedule=...`` — the bit-parity mode: the
+  coordinator serves clients in exactly the given ``make_schedule`` order
+  (client address == worker slot), reproducing ``AsyncTrainer.run`` losses
+  bit-for-bit while every byte still crosses the real codec.
+* :func:`run_inprocess` with ``plans=...`` — the scenario mode: a
+  :class:`transport.VirtualClock` orders events by per-client virtual time
+  (compute speed + measured bytes / bandwidth + fault delay), supporting
+  partial participation, joins/leaves, and non-IID sharding.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core import engine as engine_lib
+from repro.core.engine import CompressionSpec
+
+from . import wire
+from .client import ClusterClient
+from .coordinator import Coordinator
+from .scenarios import ClientPlan
+from .transport import FaultInjector, InProcHub, ScheduleDriven, VirtualClock
+
+
+def run_inprocess(
+    strategy,
+    grad_fn,
+    params0,
+    batch_fn,
+    *,
+    n_workers: int | None = None,
+    schedule=None,
+    plans: list[ClientPlan] | None = None,
+    lr: float = 0.1,
+    lr_fn=None,
+    secondary_density: float | None = None,
+    secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC,
+    inject_faults: bool = False,
+    timeout: float = 300.0,
+):
+    """Run coordinator + clients on the in-process transport.
+
+    Exactly one of ``schedule`` (parity mode) / ``plans`` (scenario mode)
+    must be given.  Returns ``(final_params, History)`` like
+    ``AsyncTrainer.run`` minus the server state.
+    """
+    if (schedule is None) == (plans is None):
+        raise ValueError("pass exactly one of schedule= or plans=")
+
+    hub = InProcHub()
+    coord_t = hub.endpoint(wire.COORDINATOR_ID)
+
+    if schedule is not None:
+        schedule = np.asarray(schedule)
+        n_workers = int(n_workers or (schedule.max() + 1))
+        events_of = {k: np.flatnonzero(schedule == k)
+                     for k in range(n_workers)}
+        # a worker with no scheduled events would block on WELCOME forever
+        plans = [ClientPlan(client_id=k, n_rounds=len(events_of[k]))
+                 for k in range(n_workers) if len(events_of[k])]
+        scheduler = ScheduleDriven(schedule)
+        max_events = len(schedule)
+        virtual_costs = None
+    else:
+        n_workers = n_workers or len(plans)
+        events_of = None
+        scheduler = VirtualClock()
+        for p in plans:
+            scheduler.register(p.client_id, t_join=p.join_time,
+                               compute_time=p.compute_time)
+        max_events = None
+        virtual_costs = {p.client_id: p.fault_policy(realtime=False)
+                         for p in plans}
+
+    coord = Coordinator(
+        transport=coord_t,
+        params0=params0,
+        n_slots=n_workers,
+        secondary_density=secondary_density,
+        secondary_spec=secondary_spec,
+        scheduler=scheduler,
+        virtual_costs=virtual_costs,
+        recv_timeout=timeout,
+    )
+
+    clients, threads, errors = [], [], []
+    for p in plans:
+        endpoint = hub.endpoint(p.client_id)
+        if inject_faults:
+            endpoint = FaultInjector(
+                endpoint, p.fault_policy(realtime=False),
+                droppable=lambda payload: payload[:1] == bytes([wire.UP]))
+        c = ClusterClient(
+            transport=endpoint,
+            strategy=strategy,
+            grad_fn=grad_fn,
+            params0=params0,
+            batch_fn=batch_fn,
+            plan=p,
+            lr=lr,
+            lr_fn=lr_fn,
+            event_fn=(
+                (lambda step, ev=events_of[p.client_id]: ev[step])
+                if events_of is not None else None),
+            reply_timeout=1.0 if inject_faults else None,
+        )
+        clients.append(c)
+
+        def _run(c=c):
+            try:
+                c.run()
+            except Exception as exc:  # surface client failures in the test
+                errors.append(exc)
+
+        t = threading.Thread(target=_run, daemon=True)
+        threads.append(t)
+        t.start()
+
+    try:
+        final, hist = coord.serve(max_events=max_events)
+    except Exception:
+        if errors:   # a dead client explains the coordinator timeout better
+            raise errors[0]
+        raise
+    for t in threads:
+        t.join(timeout=timeout)
+    if errors:
+        raise errors[0]
+    return final, hist

@@ -15,13 +15,17 @@ Staleness therefore emerges naturally: a slow worker computes gradients on a
 model that is many server-updates old — exactly the regime the paper's
 SAMomentum is designed to survive.
 
-The per-event exchange is one jitted function (donated worker/server state),
-so simulating thousands of events with small models is fast on CPU.
+Each event runs as four jitted stages — client compute, server
+receive+select, server commit, worker apply — the SAME jitted programs the
+federated cluster runtime (repro.cluster) executes on either side of its
+wire, with the codec's quantizer between them.  That shared decomposition is
+what makes the simulator's losses bit-for-bit reproducible on the real
+transport; byte accounting is the codec's measured frame sizes
+(wire.frame_bytes), not an analytic formula.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -32,7 +36,6 @@ from . import engine as engine_lib
 from . import server as ps
 from .baselines import Strategy, msgd_step
 from .engine import CompressionSpec
-from .sparsify import SparseLeaf, message_bytes
 
 
 def make_schedule(
@@ -69,6 +72,62 @@ class History(NamedTuple):
     evals: list                 # [(event_idx, metric), ...]
 
 
+# ---------------------------------------------------------------------------
+# The four per-event stages, decomposed exactly as the cluster runtime runs
+# them (client compute | server receive+select | server commit | client
+# apply).  Both AsyncTrainer and repro.cluster jit THESE SAME functions, so
+# XLA compiles one identical program for each stage and the simulator is
+# bit-for-bit reproducible on the real runtime (tests/test_cluster.py).
+# Wire quantization happens BETWEEN stages via wire.quantize_message — the
+# codec's jitted quantizer — never inside the strategy jit.
+# ---------------------------------------------------------------------------
+
+def strip_quantize(strategy: Strategy) -> Strategy:
+    """The strategy with in-engine wire quantization disabled — message
+    values leave the compute stage raw; the wire (or its in-process stand-in
+    ``wire.quantize_message``) owns value quantization."""
+    if strategy.quantize == "none":
+        return strategy
+    return dataclasses.replace(strategy, quantize="none")
+
+
+def make_client_step(strategy: Strategy, grad_fn):
+    """jit(client compute): grads on the stale local model + strategy step.
+
+    Returns (new strategy state, loss, RAW upward message).
+    """
+    strategy = strip_quantize(strategy)
+
+    def client_step(wparams, wstrat, batch, lr):
+        loss, grads = grad_fn(wparams, batch)
+        wstrat, msg = strategy.step(wstrat, grads, lr)
+        return wstrat, loss, msg
+
+    return jax.jit(client_step)
+
+
+def make_server_step(secondary_density, spec: CompressionSpec):
+    """jit(server): apply the upward message, select the RAW downward one."""
+
+    def server_step(sstate, msg, worker_id):
+        sstate = ps.receive(sstate, msg)
+        G = ps.send_select(sstate, worker_id,
+                           secondary_density=secondary_density, spec=spec)
+        return sstate, G
+
+    return jax.jit(server_step)
+
+
+def make_commit():
+    """jit(server commit): fold the SHIPPED downward message into v_k."""
+    return jax.jit(ps.send_commit)
+
+
+def make_apply():
+    """jit(worker apply): theta <- theta + G (Eq. 5)."""
+    return jax.jit(ps.apply_to_params)
+
+
 @dataclasses.dataclass
 class AsyncTrainer:
     """Asynchronous PS training loop over a gradient function.
@@ -91,17 +150,6 @@ class AsyncTrainer:
         ]
         return ps.init(params0, self.n_workers), workers
 
-    def _exchange(self, sstate, wparams, wstrat, batch, worker_id, lr):
-        loss, grads = self.grad_fn(wparams, batch)
-        wstrat, msg = self.strategy.step(wstrat, grads, lr)
-        sstate = ps.receive(sstate, msg)
-        sstate, G = ps.send(
-            sstate, worker_id, secondary_density=self.secondary_density,
-            spec=self.secondary_spec,
-        )
-        wparams = ps.apply_to_params(wparams, G)
-        return sstate, wparams, wstrat, loss, msg, G
-
     def run(
         self,
         params0,
@@ -113,8 +161,15 @@ class AsyncTrainer:
         eval_every: int = 0,
     ):
         """Run the full schedule.  batch_fn(event_idx, worker_id) -> batch."""
+        from repro.cluster import wire  # codec quantizer + byte accounting
+
         sstate, workers = self.init(params0)
-        exchange = jax.jit(self._exchange)
+        client_step = make_client_step(self.strategy, self.grad_fn)
+        server_step = make_server_step(self.secondary_density,
+                                       self.secondary_spec)
+        commit, apply_G = make_commit(), make_apply()
+        up_mode = self.strategy.quantize
+        down_mode = self.secondary_spec.quantize
         last_sync = np.zeros(self.n_workers, dtype=np.int64)
         losses = np.zeros(len(schedule), dtype=np.float64)
         staleness = np.zeros(len(schedule), dtype=np.int64)
@@ -124,18 +179,19 @@ class AsyncTrainer:
             k = int(k)
             lr = self.lr if lr_fn is None else float(lr_fn(e))
             batch = batch_fn(e, k)
-            sstate, wp, wst, loss, msg, G = exchange(
-                sstate, workers[k]["params"], workers[k]["strat"],
-                batch, jnp.int32(k), lr,
-            )
-            workers[k]["params"], workers[k]["strat"] = wp, wst
+            wst, loss, msg = client_step(
+                workers[k]["params"], workers[k]["strat"], batch, lr)
+            msg = wire.quantize_message(msg, up_mode)
+            sstate, G = server_step(sstate, msg, jnp.int32(k))
+            G = wire.quantize_message(G, down_mode)
+            sstate = commit(sstate, jnp.int32(k), G)
+            workers[k]["params"] = apply_G(workers[k]["params"], G)
+            workers[k]["strat"] = wst
             losses[e] = float(loss)
             staleness[e] = e - last_sync[k]
             last_sync[k] = e + 1
-            vb = getattr(self.strategy, "value_bits", 32)
-            up_bytes += _msg_bytes(msg, value_bits=vb)
-            down_bytes += _msg_bytes(
-                G, value_bits=self.secondary_spec.value_bits)
+            up_bytes += wire.frame_bytes(msg, mode=up_mode)
+            down_bytes += wire.frame_bytes(G, mode=down_mode)
             if eval_fn is not None and eval_every and (e + 1) % eval_every == 0:
                 model = ps.global_model(params0, sstate)
                 evals.append((e + 1, eval_fn(model)))
@@ -149,19 +205,6 @@ class AsyncTrainer:
             evals=evals,
         )
         return final, sstate, hist
-
-
-def _msg_bytes(msg, *, value_bits: int = 32) -> int:
-    total = 0
-    for m in msg:
-        if isinstance(m, SparseLeaf):
-            total += (m.values.size * value_bits) // 8 + m.indices.size * 4
-        else:
-            # dense downward diff: wire format would send nnz (value,index)
-            # pairs when sparse is cheaper, else the dense vector.
-            nnz = int(jnp.sum(m != 0.0))
-            total += min(nnz * 8, m.size * m.dtype.itemsize)
-    return total
 
 
 def run_msgd(

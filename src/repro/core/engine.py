@@ -352,7 +352,8 @@ def rows_support_mask(idx, n: int):
     return jnp.zeros((S, n), bool).at[rows, idx].set(True)
 
 
-def _maybe_quantize_leaf(leaf: SparseLeaf, mode: str) -> SparseLeaf:
+def quantize_leaf(leaf: SparseLeaf, mode: str) -> SparseLeaf:
+    """Wire-quantize one message leaf's values (indices untouched)."""
     if mode == "none":
         return leaf
     vq, _ = quantize_dequantize(leaf.values, mode)
@@ -372,7 +373,7 @@ def select(x, k: int, spec: CompressionSpec = DEFAULT_SPEC) -> SparseLeaf:
     quantization)."""
     flat = x.reshape(-1)
     eng = resolve_engine(spec, int(flat.shape[0]))
-    return _maybe_quantize_leaf(eng.select(flat, k), spec.quantize)
+    return quantize_leaf(eng.select(flat, k), spec.quantize)
 
 
 def select_rows(x2d, k: int, spec: CompressionSpec = DEFAULT_SPEC):
@@ -403,7 +404,7 @@ def samomentum_step(u, g, *, momentum: float, lr: float, k: int,
         msg = eng.select(flat, k)
         mask = support_mask(msg.indices, flat.shape[0])
         u_new = samomentum_rescale(flat, mask, momentum).reshape(u.shape)
-    return _maybe_quantize_leaf(msg, spec.quantize), u_new
+    return quantize_leaf(msg, spec.quantize), u_new
 
 
 def _samomentum_step_blockwise(u, g, eng: BlockwiseEngine, *, momentum, lr,

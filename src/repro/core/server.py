@@ -19,6 +19,7 @@ serves every architecture's parameter pytree.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Sequence
 
 import jax
@@ -57,6 +58,49 @@ def receive(state: ServerState, msg) -> ServerState:
     return ServerState(M=tuple(new_M), v=state.v, t=state.t + 1)
 
 
+def send_select(
+    state: ServerState,
+    worker_id,
+    *,
+    secondary_density: float | None = None,
+    spec: CompressionSpec = engine_lib.EXACT_SPEC,
+):
+    """Select the RAW (unquantized) downward message G_k; no state change.
+
+    Splitting selection from the ``v_k`` update lets the cluster runtime
+    interpose the wire codec: the codec quantizes values during encode and
+    :func:`send_commit` is then fed exactly what the client decoded, so
+    server bookkeeping always tracks the shipped bits.
+    """
+    spec_raw = dataclasses.replace(spec, quantize="none")
+    G = []
+    for M_leaf, v_leaf in zip(state.M, state.v):
+        diff = M_leaf - v_leaf[worker_id]
+        if secondary_density is None:
+            G.append(diff)
+        else:
+            k = density_to_k(int(diff.shape[0]), secondary_density)
+            G.append(engine_lib.select(diff, k, spec_raw))
+    return G
+
+
+def send_commit(state: ServerState, worker_id, G) -> ServerState:
+    """Account the SHIPPED message into v_k (Eq. 4).
+
+    ``G`` must be what the worker actually receives — after any wire
+    quantization.  Dense leaves mean "everything": v_k snaps to M exactly
+    (``v + (M - v)`` would lose bits to f32 cancellation).
+    """
+    new_v = []
+    for M_leaf, v_leaf, g in zip(state.M, state.v, G):
+        if isinstance(g, SparseLeaf):
+            new_v.append(v_leaf.at[worker_id].set(
+                sparse_accumulate(v_leaf[worker_id], g)))
+        else:
+            new_v.append(v_leaf.at[worker_id].set(M_leaf))
+    return ServerState(M=tuple(state.M), v=tuple(new_v), t=state.t)
+
+
 def send(
     state: ServerState,
     worker_id,
@@ -70,22 +114,34 @@ def send(
     secondary compression — G is *implicitly* sparse, we account its true nnz
     for communication metrics) or a list of SparseLeaf (secondary
     compression, Alg. 2 lines 5-11, selected through the compression engine
-    named by ``spec``).
+    named by ``spec``).  Composition of :func:`send_select` + in-spec wire
+    quantization + :func:`send_commit`.
     """
-    new_v, G = [], []
-    for M_leaf, v_leaf in zip(state.M, state.v):
-        diff = M_leaf - v_leaf[worker_id]
-        if secondary_density is None:
-            G.append(diff)
-            new_v.append(v_leaf.at[worker_id].set(M_leaf))
-        else:
-            k = density_to_k(int(diff.shape[0]), secondary_density)
-            msg = engine_lib.select(diff, k, spec)
-            G.append(msg)
-            new_v.append(
-                v_leaf.at[worker_id].set(sparse_accumulate(v_leaf[worker_id], msg))
-            )
-    return ServerState(M=tuple(state.M), v=tuple(new_v), t=state.t), G
+    G_raw = send_select(state, worker_id,
+                        secondary_density=secondary_density, spec=spec)
+    G = [engine_lib.quantize_leaf(g, spec.quantize)
+         if isinstance(g, SparseLeaf) else g for g in G_raw]
+    return send_commit(state, worker_id, G), G
+
+
+def add_worker(state: ServerState) -> tuple[ServerState, int]:
+    """Grow every v leaf by one zero row (elastic join); returns the slot.
+
+    A fresh slot has v_k = 0, so a joining client starting from theta_0 is
+    brought fully up to date by its first downward message (G = M - 0).
+    """
+    new_id = int(state.v[0].shape[0])
+    new_v = tuple(
+        jnp.concatenate([v, jnp.zeros((1, v.shape[1]), v.dtype)])
+        for v in state.v)
+    return ServerState(M=state.M, v=new_v, t=state.t), new_id
+
+
+def reset_worker(state: ServerState, worker_id: int) -> ServerState:
+    """Zero a departed worker's v row so the slot can serve a new client
+    (which starts from theta_0 and must receive all of M on first send)."""
+    new_v = tuple(v.at[worker_id].set(0.0) for v in state.v)
+    return ServerState(M=state.M, v=new_v, t=state.t)
 
 
 def apply_to_params(params, G):

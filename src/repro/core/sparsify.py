@@ -109,12 +109,15 @@ def sampled_threshold(
     n = flat.shape[0]
     s = min(sample_size, n)
     if key is None:
-        stride = max(1, n // s)
-        sample = flat[:: stride][:s]
+        # ceil stride: the sample spans the WHOLE tensor (a floor stride
+        # truncates coverage to the first s*stride elements whenever n/s is
+        # fractional), at the cost of ceil(n/stride) <= s actual samples
+        stride = -(-n // s)
+        sample = flat[::stride]
     else:
         idx = jax.random.randint(key, (s,), 0, n)
         sample = flat[idx]
-    ks = max(1, int(round(s * density)))
+    ks = max(1, int(round(sample.shape[0] * density)))
     return jax.lax.top_k(sample, ks)[0][-1]
 
 
@@ -197,26 +200,39 @@ def dense_bytes(tree) -> int:
 # the selection itself is error-compensated by construction.
 # ---------------------------------------------------------------------------
 
-def quantize_dequantize(values: jax.Array, mode: str):
-    """Quantize sparse message values for the wire; returns (dequantized
-    values, bits per value).
+QUANTIZE_BITS = {"none": 32, "bf16": 16, "int8": 8, "tern": 2}
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def quantize_parts(values: jax.Array, mode: str):
+    """(codes, scale, dequantized) — THE quantization arithmetic.
+
+    The single implementation behind both :func:`quantize_dequantize`
+    (every engine/strategy path) and the cluster wire codec's encoder
+    (``cluster/wire.py`` ships ``codes``+``scale``, the receiver decodes to
+    exactly ``dequantized``).  One jitted program means the simulator and a
+    real cluster run quantize bit-identically.
 
     modes:
-      none  — float32 passthrough (32 bits)
-      bf16  — bfloat16 wire (16)
+      none  — float32 passthrough (32 bits); codes == values
+      bf16  — bfloat16 wire (16); codes are the bf16 values
       int8  — symmetric per-message int8 (8 + one f32 scale per message)
       tern  — TernGrad-style {-1, 0, +1} * mean|v| (2 bits + one scale);
               with top-k inputs the 0 level is unused, so this is
               effectively 1-bit sign + shared magnitude.
     """
+    values = values.astype(jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
     if mode == "none":
-        return values.astype(jnp.float32), 32
+        return values, zero, values
     if mode == "bf16":
-        return values.astype(jnp.bfloat16).astype(jnp.float32), 16
+        b = values.astype(jnp.bfloat16)
+        return b, zero, b.astype(jnp.float32)
     if mode == "int8":
         scale = jnp.max(jnp.abs(values)) / 127.0 + 1e-12
         q = jnp.clip(jnp.round(values / scale), -127, 127)
-        return (q * scale).astype(jnp.float32), 8
+        return q.astype(jnp.int8), scale.astype(jnp.float32), \
+            (q * scale).astype(jnp.float32)
     if mode == "tern":
         # scale over NONZERO entries only: exact zeros are either genuine
         # (nothing to ship) or the sampled engine's decode-neutral padding,
@@ -224,5 +240,13 @@ def quantize_dequantize(values: jax.Array, mode: str):
         # real value with no error compensation; sign(0) keeps them 0
         nnz = jnp.maximum(jnp.sum(values != 0.0), 1)
         scale = jnp.sum(jnp.abs(values)) / nnz
-        return (jnp.sign(values) * scale).astype(jnp.float32), 2
+        s = jnp.sign(values)
+        return s.astype(jnp.int8), scale.astype(jnp.float32), \
+            (s * scale).astype(jnp.float32)
     raise ValueError(f"unknown quantization mode {mode!r}")
+
+
+def quantize_dequantize(values: jax.Array, mode: str):
+    """Quantize sparse message values for the wire; returns (dequantized
+    values, bits per value).  See :func:`quantize_parts` for the modes."""
+    return quantize_parts(values, mode)[2], QUANTIZE_BITS[mode]

@@ -1,0 +1,174 @@
+"""Cluster runtime: simulator bit-parity, TCP, federated scenarios."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_sim, make_strategy, server as ps
+from repro.core.engine import CompressionSpec
+from repro.cluster import run_inprocess
+from repro.cluster.client import ClusterClient
+from repro.cluster.coordinator import Coordinator
+from repro.cluster.scenarios import (ClientPlan, dirichlet_class_weights,
+                                     hetero_plans, participates)
+from repro.cluster.transport import (TcpClientTransport,
+                                     TcpCoordinatorTransport)
+
+
+def _problem():
+    key = jax.random.PRNGKey(0)
+    Wt = jax.random.normal(key, (6, 4))
+
+    def grad_fn(params, batch):
+        x, y = batch
+
+        def loss(p):
+            return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(e, k):
+        kk = jax.random.PRNGKey(int(e) * 131 + int(k) + 1)
+        x = jax.random.normal(kk, (8, 6))
+        return x, x @ Wt
+
+    params0 = {"w": jnp.zeros((6, 4)), "b": jnp.zeros((4,))}
+    return grad_fn, batch_fn, params0
+
+
+# ---------------------------------------------------------------------------
+# the keystone contract: bit-parity with AsyncTrainer on the same schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw,sd,spec", [
+    ("asgd", {}, None, CompressionSpec(engine="exact")),
+    ("dgs", {"density": 0.2, "momentum": 0.7}, 0.1,
+     CompressionSpec(engine="exact")),
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}, 0.1,
+     CompressionSpec(engine="exact", quantize="bf16")),
+    ("gd_async", {"density": 0.2, "quantize": "tern"}, None,
+     CompressionSpec(engine="exact")),
+])
+def test_inprocess_cluster_bit_parity(name, kw, sd, spec):
+    """Same schedule -> bit-identical losses/params, and the simulator's
+    byte accounting == the bytes actually moved through the transport."""
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(3, 40, seed=7, hetero=0.9)
+    strat = make_strategy(name, **kw)
+    tr = async_sim.AsyncTrainer(strat, grad_fn, 3, lr=0.03,
+                                secondary_density=sd, secondary_spec=spec)
+    f_sim, _, h_sim = tr.run(params0, sched, batch_fn)
+    f_cl, h_cl = run_inprocess(strat, grad_fn, params0, batch_fn,
+                               schedule=sched, lr=0.03,
+                               secondary_density=sd, secondary_spec=spec)
+    np.testing.assert_array_equal(h_sim.losses, h_cl.losses)
+    np.testing.assert_array_equal(h_sim.worker_ids, h_cl.worker_ids)
+    np.testing.assert_array_equal(h_sim.staleness, h_cl.staleness)
+    for a, b in zip(jax.tree.leaves(f_sim), jax.tree.leaves(f_cl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h_sim.up_bytes == h_cl.up_bytes
+    assert h_sim.down_bytes == h_cl.down_bytes
+
+
+# ---------------------------------------------------------------------------
+# TCP backend
+# ---------------------------------------------------------------------------
+
+def test_tcp_two_clients_converge():
+    grad_fn, batch_fn, params0 = _problem()
+    strat = make_strategy("dgs", density=0.2, momentum=0.7, quantize="int8")
+    ct = TcpCoordinatorTransport()
+    coord = Coordinator(transport=ct, params0=params0, n_slots=2,
+                        secondary_density=0.2, recv_timeout=120.0)
+
+    def client_main(cid):
+        t = TcpClientTransport("127.0.0.1", ct.port, cid)
+        ClusterClient(
+            transport=t, strategy=strat, grad_fn=grad_fn, params0=params0,
+            batch_fn=batch_fn, plan=ClientPlan(client_id=cid, n_rounds=8),
+            lr=0.05).run()
+        t.close()
+
+    threads = [threading.Thread(target=client_main, args=(i,), daemon=True)
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    final, hist = coord.serve()
+    for t in threads:
+        t.join(timeout=60)
+    ct.close()
+    assert len(hist.losses) == 16
+    assert hist.losses[-4:].mean() < hist.losses[:4].mean()
+    assert hist.up_bytes > 0 and hist.down_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# federated scenarios
+# ---------------------------------------------------------------------------
+
+def test_scenario_elastic_partial_faulty_is_deterministic():
+    """Joins/leaves + 70% participation + drops: runs, converges, and the
+    whole virtual-time execution replays bit-identically."""
+    grad_fn, batch_fn, params0 = _problem()
+    plans = hetero_plans(4, 10, hetero=0.8, seed=3, participation=0.7,
+                         late_join=1, early_leave=1, bandwidth=1e5,
+                         drop_prob=0.15)
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    runs = [run_inprocess(strat, grad_fn, params0, batch_fn, plans=plans,
+                          lr=0.05, inject_faults=True,
+                          secondary_density=0.25) for _ in range(2)]
+    (f1, h1), (f2, h2) = runs
+    n_max = 3 * 10 + 5  # 3 full-life clients + early leaver's half life
+    assert 5 < len(h1.losses) < n_max
+    assert h1.losses[-3:].mean() < h1.losses[:3].mean()
+    np.testing.assert_array_equal(h1.losses, h2.losses)
+    np.testing.assert_array_equal(h1.worker_ids, h2.worker_ids)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_grows_and_reuses_slots():
+    """More clients than initial slots: v grows via ps.add_worker; a freed
+    slot is zeroed and reused by the next joiner."""
+    grad_fn, batch_fn, params0 = _problem()
+    plans = [ClientPlan(client_id=0, n_rounds=4),
+             ClientPlan(client_id=1, n_rounds=2),
+             # joins after client 1 leaves: reuses its slot
+             ClientPlan(client_id=2, n_rounds=4, join_time=10.0)]
+    strat = make_strategy("dgs", density=0.5, momentum=0.5)
+    final, hist = run_inprocess(strat, grad_fn, params0, batch_fn,
+                                plans=plans, n_workers=1, lr=0.05)
+    assert len(hist.losses) == 10
+    # slot ids stay within the grown pool (1 initial + 1 grown)
+    assert set(hist.worker_ids.tolist()) <= {0, 1}
+
+
+def test_participation_draws_are_seeded():
+    plan = ClientPlan(client_id=1, n_rounds=100, participation=0.5, seed=9)
+    a = [participates(plan, r) for r in range(100)]
+    b = [participates(plan, r) for r in range(100)]
+    assert a == b
+    assert 20 < sum(a) < 80
+
+
+def test_dirichlet_shards_skew_with_alpha():
+    w_skew = dirichlet_class_weights(16, 10, 0.1, seed=0)
+    w_iid = dirichlet_class_weights(16, 10, 1000.0, seed=0)
+    np.testing.assert_allclose(w_skew.sum(1), 1.0, atol=1e-9)
+    assert w_skew.max(1).mean() > 0.6     # concentrated
+    assert w_iid.max(1).mean() < 0.2      # near uniform
+
+
+def test_reset_worker_zeroes_v_row():
+    params0 = {"w": jnp.ones((4,))}
+    state = ps.init(params0, 2)
+    state, _ = ps.add_worker(state)
+    assert state.v[0].shape[0] == 3
+    msg = [jnp.ones((4,), jnp.float32)]
+    state = ps.receive(state, msg)
+    state, _ = ps.send(state, 2)
+    assert float(jnp.abs(state.v[0][2]).sum()) > 0
+    state = ps.reset_worker(state, 2)
+    assert float(jnp.abs(state.v[0][2]).sum()) == 0.0

@@ -1,0 +1,143 @@
+"""Wire codec: round-trip exactness, quantize semantics, size accounting."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.cluster import wire
+from repro.core.sparsify import SparseLeaf, quantize_dequantize, topk_select
+
+MODES = ("none", "bf16", "int8", "tern")
+
+# the repo always executes quantize_dequantize under jit (inside engine /
+# strategy jits, and as the codec's _quantize_parts); XLA's fused
+# evaluation can differ from eager by 1 ulp (e.g. FMA-contracted
+# `max/127 + 1e-12`), so bitwise equivalence is pinned to the jitted form
+# and eager gets an allclose-at-1-ulp check
+_qd_jit = {m: jax.jit(partial(quantize_dequantize, mode=m)) for m in MODES}
+
+
+def _assert_matches_quantize_dequantize(dec_values, raw_values, mode):
+    ref_jit = _qd_jit[mode](raw_values)[0]
+    np.testing.assert_array_equal(np.asarray(dec_values),
+                                  np.asarray(ref_jit))
+    ref_eager = quantize_dequantize(raw_values, mode)[0]
+    np.testing.assert_allclose(np.asarray(dec_values),
+                               np.asarray(ref_eager), rtol=3e-7, atol=0)
+
+
+def _leaf(n, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    return topk_select(x, k)
+
+
+class TestLeafRoundTrip:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("n,k", [(8, 1), (300, 7), (70000, 33),
+                                     (50, 50)])
+    def test_sparse_roundtrip_exact_vs_quantize_dequantize(self, mode, n, k):
+        """decode(encode(v, mode)) == quantize_dequantize(v, mode) bitwise,
+        and equals the `shipped` leaf the encoder hands back."""
+        leaf = _leaf(n, k, seed=n + k)
+        frame, shipped = wire.encode_leaf(5, leaf, mode)
+        leaf_id, dec, end = wire.decode_leaf(frame)
+        assert leaf_id == 5 and end == len(frame)
+        _assert_matches_quantize_dequantize(dec.values, leaf.values, mode)
+        np.testing.assert_array_equal(np.asarray(dec.values),
+                                      np.asarray(shipped.values))
+        np.testing.assert_array_equal(np.asarray(dec.indices),
+                                      np.asarray(leaf.indices))
+        assert dec.size == n
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_frame_size_matches_accounting(self, mode):
+        for n, k in [(8, 3), (300, 7), (70000, 128)]:
+            leaf = _leaf(n, k, seed=1)
+            frame, _ = wire.encode_leaf(0, leaf, mode)
+            assert len(frame) == wire.leaf_frame_bytes(k, n, mode)
+
+    def test_index_width_narrows_with_size(self):
+        # u8 for <=256, u16 for <=65536, u32 beyond — derived from `size`
+        assert wire.index_dtype(256) == np.uint8
+        assert wire.index_dtype(257) == np.uint16
+        assert wire.index_dtype(1 << 16) == np.uint16
+        assert wire.index_dtype((1 << 16) + 1) == np.uint32
+        small = wire.leaf_frame_bytes(10, 200, "none")
+        big = wire.leaf_frame_bytes(10, 1 << 20, "none")
+        assert big - small == 10 * 3  # 3 extra index bytes per entry
+
+    @pytest.mark.parametrize("nnz_frac", [0.0, 0.05, 0.5, 1.0])
+    def test_dense_roundtrip_exact(self, nnz_frac):
+        rng = np.random.default_rng(3)
+        d = np.where(rng.random(400) < nnz_frac,
+                     rng.normal(size=400), 0.0).astype(np.float32)
+        frame, shipped = wire.encode_leaf(1, jnp.asarray(d), "none")
+        _, dec, end = wire.decode_leaf(frame)
+        assert end == len(frame)
+        np.testing.assert_array_equal(np.asarray(dec), d)
+        np.testing.assert_array_equal(np.asarray(shipped), d)
+        # codec picked the cheaper dense encoding, and accounted it exactly
+        nnz = int(np.count_nonzero(d))
+        assert len(frame) == wire.leaf_frame_bytes(
+            nnz, 400, "none", wire._dense_kind(nnz, 400))
+
+    def test_tern_packs_four_codes_per_byte(self):
+        leaf = _leaf(1000, 100, seed=2)
+        f_tern, _ = wire.encode_leaf(0, leaf, "tern")
+        f_none, _ = wire.encode_leaf(0, leaf, "none")
+        # 100 f32 values (400B) become 25 code bytes + 4B scale
+        assert len(f_none) - len(f_tern) == 400 - 25 - 4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 64), st.integers(0, 2 ** 31))
+def test_property_roundtrip_all_modes(n, k, seed):
+    k = min(k, n)
+    leaf = _leaf(n, k, seed)
+    for mode in MODES:
+        frame, shipped = wire.encode_leaf(0, leaf, mode)
+        assert len(frame) == wire.leaf_frame_bytes(k, n, mode)
+        _, dec, _ = wire.decode_leaf(frame)
+        _assert_matches_quantize_dequantize(dec.values, leaf.values, mode)
+        np.testing.assert_array_equal(np.asarray(dec.values),
+                                      np.asarray(shipped.values))
+        np.testing.assert_array_equal(np.asarray(dec.indices),
+                                      np.asarray(leaf.indices))
+
+
+class TestMessage:
+    def test_envelope_and_multi_leaf(self):
+        msgs = [_leaf(100, 5, 0), jnp.zeros(64),
+                _leaf(300, 2, 1)]
+        payload, shipped = wire.encode_message(
+            wire.UP, 3, 17, msgs, mode="int8", aux=2.5)
+        assert len(payload) == wire.frame_bytes(msgs, mode="int8")
+        m = wire.decode_message(payload)
+        assert (m.type, m.sender, m.seq, m.aux) == (wire.UP, 3, 17, 2.5)
+        assert len(m.leaves) == 3
+        for dec, ship in zip(m.leaves, shipped):
+            if isinstance(ship, SparseLeaf):
+                np.testing.assert_array_equal(np.asarray(dec.values),
+                                              np.asarray(ship.values))
+            else:
+                np.testing.assert_array_equal(np.asarray(dec),
+                                              np.asarray(ship))
+
+    def test_control_messages(self):
+        for t in (wire.HELLO, wire.WELCOME, wire.SKIP, wire.BYE):
+            payload, _ = wire.encode_message(t, 9, 4)
+            m = wire.decode_message(payload)
+            assert (m.type, m.sender, m.seq, m.leaves) == (t, 9, 4, [])
+
+    def test_quantize_message_matches_encode_shipped(self):
+        """async_sim's in-process stand-in == what the codec ships."""
+        msgs = [_leaf(128, 9, 7), _leaf(40, 3, 8)]
+        for mode in MODES:
+            _, shipped = wire.encode_message(wire.UP, 0, 0, msgs, mode=mode)
+            local = wire.quantize_message(msgs, mode)
+            for a, b in zip(shipped, local):
+                np.testing.assert_array_equal(np.asarray(a.values),
+                                              np.asarray(b.values))
