@@ -1,10 +1,19 @@
 #!/usr/bin/env bash
-# Fast CI path: fail on the first broken test, quiet output, then the
+# Fast CI path: lint (when ruff is installed), fail on the first broken
+# test, then the fused-arena/scan-runner hot-path smoke, then the
 # timeout-guarded multiprocess socket smoke (the TCP cluster path must not
 # rot off-TPU: coordinator + 2 client processes over real sockets).
 # Full tier-1 sweep (no -x) is what .github/workflows/ci.yml runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests
+else
+  echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
+fi
 python -m pytest -q -x "$@"
+# fused arena event loop + lax.scan runner: must beat per-leaf / stay
+# byte-parity-exact (asserts inside --smoke)
+timeout 600 python -m benchmarks.bench_scalability --smoke
 timeout 300 python -m repro.launch.cluster --smoke

@@ -17,6 +17,7 @@ from typing import Any, Callable
 
 from repro.core import async_sim
 from repro.core.baselines import Strategy
+from repro.core.paramspace import ParamSpace
 
 from . import wire
 from .scenarios import ClientPlan, participates
@@ -48,9 +49,12 @@ class ClusterClient:
     def run(self):
         """HELLO -> (UP/DOWN | SKIP)* -> BYE; returns local History-lite."""
         addr = self.plan.client_id
-        client_step = async_sim.make_client_step(self.strategy, self.grad_fn)
+        space = ParamSpace.from_tree(self.params0)
+        client_step = async_sim.make_client_step(self.strategy, self.grad_fn,
+                                                 space)
         apply_G = async_sim.make_apply()
         up_mode = self.strategy.quantize
+        up_seg = self.strategy.message_seg(space)
 
         hello, _ = wire.encode_message(wire.HELLO, addr,
                                        self._proposed_slot())
@@ -60,7 +64,7 @@ class ClusterClient:
         assert welcome.type == wire.WELCOME, welcome.type
         slot = welcome.seq
 
-        params = self.params0
+        theta = space.pack(self.params0)   # the local model, as one arena
         strat = self.strategy.init(self.params0)
         losses, seq = [], 0
         for step in range(self.plan.n_rounds):
@@ -71,16 +75,17 @@ class ClusterClient:
             e = step if self.event_fn is None else int(self.event_fn(step))
             lr = self.lr if self.lr_fn is None else float(self.lr_fn(e))
             batch = self.batch_fn(e, slot)
-            strat, loss, msg = client_step(params, strat, batch, lr)
+            strat, loss, msg = client_step(theta, strat, batch, lr)
             payload, _ = wire.encode_message(
-                wire.UP, addr, seq, msg, mode=up_mode, aux=float(loss))
+                wire.UP, addr, seq, [msg], mode=up_mode, seg=up_seg,
+                aux=float(loss))
             down = self._exchange(payload, seq)
-            params = apply_G(params, down.leaves)
+            theta = apply_G(theta, down.leaves[0])
             losses.append(float(loss))
             seq += 1
         bye, _ = wire.encode_message(wire.BYE, addr, seq)
         self.transport.send(wire.COORDINATOR_ID, bye)
-        return params, losses
+        return space.unpack(theta), losses
 
     def _proposed_slot(self) -> int:
         # schedule-driven runs pin client addr == worker slot; elastic

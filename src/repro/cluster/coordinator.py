@@ -63,6 +63,10 @@ class Coordinator:
             self.secondary_density, self.secondary_spec)
         self._commit = async_sim.make_commit()
         self._down_mode = self.secondary_spec.quantize
+        # arena frame segmentation of the sparse downward message (None =
+        # dense downward, framed DENSE/DENSE_COO)
+        self._down_seg = (self.sstate.space.ks(self.secondary_density)
+                          if self.secondary_density is not None else None)
         self._free = list(range(self.n_slots))
         self._slot_of: dict[int, int] = {}
         self._last_seq: dict[int, int] = {}
@@ -127,6 +131,9 @@ class Coordinator:
             return "bye"
         if msg.type != wire.UP:
             raise ValueError(f"unexpected {wire.TYPE_NAMES[msg.type]}")
+        if len(msg.leaves) != 1:
+            # the arena protocol ships exactly ONE frame per UP message
+            return "ignored"
         if src not in self._slot_of:
             # UP without a completed HELLO (restarted or foreign peer):
             # reject the frame, not the whole run
@@ -149,11 +156,12 @@ class Coordinator:
         self._last_sync[slot] = e + 1
 
         self.sstate, G_raw = self._server_step(
-            self.sstate, msg.leaves, jnp.int32(slot))
+            self.sstate, msg.leaves[0], jnp.int32(slot))
         reply, shipped = wire.encode_message(
-            wire.DOWN, wire.COORDINATOR_ID, msg.seq, G_raw,
-            mode=self._down_mode)
-        self.sstate = self._commit(self.sstate, jnp.int32(slot), shipped)
+            wire.DOWN, wire.COORDINATOR_ID, msg.seq, [G_raw],
+            mode=self._down_mode, seg=self._down_seg)
+        self.sstate = self._commit(self.sstate, jnp.int32(slot),
+                                   shipped[0])
         self.down_bytes += len(reply)
         self._last_seq[src] = msg.seq
         self._reply_cache[src] = reply

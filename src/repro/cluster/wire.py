@@ -1,8 +1,7 @@
 """Packed binary wire codec for the federated cluster runtime.
 
 Every message between a client and the coordinator is one *envelope*
-followed by zero or more length-prefixed *leaf frames* (one per parameter
-leaf, in ``jax.tree.leaves`` order):
+followed by zero or more length-prefixed *frames*:
 
     envelope:   u8  type      HELLO/WELCOME/UP/DOWN/SKIP/BYE
                 u32 sender    client id (coordinator = 0xFFFFFFFF)
@@ -12,20 +11,33 @@ leaf, in ``jax.tree.leaves`` order):
                 f32 aux       UP: the worker's scalar loss; else 0
                 u32 n_leaves
 
-    leaf frame: u32 frame_len (bytes after this field)
-                u16 leaf_id
+    frame:      u32 frame_len (bytes after this field)
+                u16 leaf_id   (ARENA frames reuse this field as n_seg)
                 u8  mode      value packing: 0 none / 1 bf16 / 2 int8 / 3 tern
-                u8  kind      0 sparse COO / 1 dense f32 / 2 dense-as-COO
+                u8  kind      0 sparse COO / 1 dense f32 / 2 dense-as-COO /
+                              3 ARENA (global-index COO over the packed
+                              parameter arena, segmented per tensor)
                 u32 k         number of entries carried
-                u32 size      dense length of the leaf
-                [f32 scale]   int8/tern only: the per-message scale
-                uN * k        indices (kinds 0 and 2); N derived from
+                u32 size      dense length of the leaf / arena
+                [f32 scale]   kind 0, int8/tern only: the per-message scale
+                uN * k        indices (kinds 0, 2, 3); N derived from
                               ``size`` — u8 when size <= 256, u16 when
                               size <= 65536, u32 beyond — so the decoder
                               needs no extra field
                 values        none: f32*k | bf16: u16*k | int8: i8*k
                               tern: 2-bit codes, 4 per byte
                               dense f32 (kind 1): f32*size, no indices
+
+    ARENA body (kind 3) carries, between the header and the index block:
+                u32 * n_seg   per-tensor entry counts (the segmentation)
+                f32 * n_seg   int8/tern only: one scale PER TENSOR
+
+The arena frame is how the flat-parameter-arena runtime (DESIGN.md §8)
+ships a whole model's sparse update as ONE frame: one header, one index
+block whose width derives from the arena ``size``, one value block.
+Quantization is segment-wise — one scale per original tensor, exactly like
+the old per-leaf frames — so arena messages are bit-equal to per-leaf ones
+and the decoder never needs the model structure (it reads the seg table).
 
 All integers little-endian.  Dense leaves always travel as f32 (quantizing
 the model-difference would break the server's ``v_k == M`` invariant, Eq. 4);
@@ -51,7 +63,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
-from repro.core.sparsify import SparseLeaf, quantize_parts as _quantize_parts
+from repro.core.sparsify import (SparseLeaf, quantize_parts as
+                                 _quantize_parts, quantize_segments)
 
 # message types
 HELLO, WELCOME, UP, DOWN, SKIP, BYE = range(6)
@@ -64,12 +77,14 @@ MODES = {"none": 0, "bf16": 1, "int8": 2, "tern": 3}
 MODE_NAMES = {v: k for k, v in MODES.items()}
 
 # leaf kinds
-SPARSE, DENSE, DENSE_COO = 0, 1, 2
+SPARSE, DENSE, DENSE_COO, ARENA = 0, 1, 2, 3
 
 _ENVELOPE = struct.Struct("<BIIfI")     # 17 bytes
 _LEN = struct.Struct("<I")              # 4-byte leaf frame length prefix
 _HEADER = struct.Struct("<HBBII")       # 12-byte leaf header
 _SCALE = struct.Struct("<f")
+
+ENVELOPE_BYTES = _ENVELOPE.size
 
 
 class Message(NamedTuple):
@@ -86,23 +101,27 @@ class Message(NamedTuple):
 # values, so both sides of the parity contract share one XLA program
 # ---------------------------------------------------------------------------
 
-def quantize_message(msgs, mode: str):
-    """Apply wire quantization to every SparseLeaf of a message list.
+def quantize_message(msg, mode: str, seg=None):
+    """Apply wire quantization to a message — what the decoder on the far
+    side will reconstruct; async_sim and the scan runner call it in place
+    of a real encode/decode round trip (it is pure jax, so it also runs
+    in-graph inside ``lax.scan``).
 
-    Dense leaves pass through untouched (they travel f32, see module doc).
-    This is what the decoder on the far side will reconstruct; async_sim
-    calls it in place of a real encode/decode round trip.
+    ``msg`` is one arena leaf (global-index SparseLeaf or dense flat
+    array); ``seg`` gives the per-tensor segmentation of a sparse arena
+    message — each segment quantizes with its own scale, matching the
+    ARENA frame encoder bit-for-bit (defaults to one segment).  Dense
+    leaves pass through untouched (they travel f32, see module doc).
+    A legacy list of per-leaf messages quantizes leaf-wise.
     """
-    if mode == "none":
-        return list(msgs)
-    out = []
-    for m in msgs:
-        if isinstance(m, SparseLeaf):
-            _, _, dq = _quantize_parts(m.values, mode)
-            out.append(SparseLeaf(values=dq, indices=m.indices, size=m.size))
-        else:
-            out.append(m)
-    return out
+    if isinstance(msg, (list, tuple)) and not isinstance(msg, SparseLeaf):
+        return [quantize_message(m, mode) for m in msg]
+    if mode == "none" or not isinstance(msg, SparseLeaf):
+        return msg
+    if seg is None:
+        seg = (msg.k,)
+    return SparseLeaf(values=quantize_segments(msg.values, mode, seg),
+                      indices=msg.indices, size=msg.size)
 
 
 # ---------------------------------------------------------------------------
@@ -140,29 +159,63 @@ def leaf_frame_bytes(k: int, size: int, mode: str, kind: int = SPARSE) -> int:
     return n + _index_nbytes(size) * k + _value_nbytes(k, mode)
 
 
+def arena_frame_bytes(seg, size: int, mode: str = "none") -> int:
+    """Serialized bytes of one ARENA frame (length prefix included) — a
+    pure function of the static ``(seg, size, mode)`` triple."""
+    k = sum(seg)
+    n = _LEN.size + _HEADER.size + 4 * len(seg)     # header + seg table
+    if mode in ("int8", "tern"):
+        n += 4 * len(seg)                           # one scale per tensor
+    return n + _index_nbytes(size) * k + _value_nbytes(k, mode)
+
+
+def frame_bytes_static(seg, size: int, mode: str = "none") -> int:
+    """Per-event wire bytes of a sparse arena message (envelope included).
+
+    Static per ``(mode, seg, size)`` — memoize once per run instead of
+    re-deriving frame sizes from on-device message structure every event.
+    """
+    return _ENVELOPE.size + arena_frame_bytes(seg, size, mode)
+
+
+def dense_frame_bytes(nnz, size: int):
+    """Frame bytes of a dense f32 leaf with ``nnz`` nonzeros — the codec
+    picks the cheaper of DENSE / DENSE_COO.  Works elementwise on numpy
+    arrays of nnz (the scan runner's vectorized accounting)."""
+    coo = (4 + _index_nbytes(size)) * nnz
+    body = np.where(coo < 4 * size, coo, 4 * size)
+    return _LEN.size + _HEADER.size + body
+
+
 def _dense_kind(nnz: int, size: int) -> int:
     """COO when (idx, value) pairs beat the dense f32 vector."""
     return (DENSE_COO
             if (4 + _index_nbytes(size)) * nnz < 4 * size else DENSE)
 
 
-def frame_bytes(msgs, *, mode: str = "none", envelope: bool = True) -> int:
-    """Wire size of a message list — equal to ``len(encode_message(...))``.
+def frame_bytes(msgs, *, mode: str = "none", seg=None,
+                envelope: bool = True) -> int:
+    """Wire size of a message — equal to ``len(encode_message(...))``.
 
-    Replaces the old analytic accounting (``async_sim._msg_bytes`` /
-    ``sparsify.message_bytes``): headers, per-message scales, and the
-    bit-packed value widths are all counted exactly as serialized.
+    Accepts one arena leaf or a legacy list of per-leaf messages.  ``seg``
+    marks a SparseLeaf as an ARENA frame with that segmentation; without
+    it the legacy per-leaf SPARSE framing is counted.  Headers, per-tensor
+    scales, and the bit-packed value widths are all counted exactly as
+    serialized.
     """
+    if isinstance(msgs, SparseLeaf) or not isinstance(msgs, (list, tuple)):
+        msgs = [msgs]
     total = _ENVELOPE.size if envelope else 0
     for m in msgs:
         if isinstance(m, SparseLeaf):
-            total += leaf_frame_bytes(m.k, m.size, mode, SPARSE)
+            if seg is not None:
+                total += arena_frame_bytes(seg, int(m.size), mode)
+            else:
+                total += leaf_frame_bytes(m.k, m.size, mode, SPARSE)
         else:
             # count on-device: only the scalar nnz crosses to the host
-            nnz = int(jnp.count_nonzero(m))
-            size = int(m.size)
-            total += leaf_frame_bytes(nnz, size, "none",
-                                      _dense_kind(nnz, size))
+            total += int(dense_frame_bytes(int(jnp.count_nonzero(m)),
+                                           int(m.size)))
     return total
 
 
@@ -191,13 +244,61 @@ def _unpack_tern(buf: bytes, k: int) -> np.ndarray:
     return codes
 
 
-def encode_leaf(leaf_id: int, leaf, mode: str = "none"):
+def _pack_values(codes, mode: str) -> bytes:
+    if mode == "none":
+        return np.asarray(codes, np.float32).tobytes()
+    if mode == "bf16":
+        return np.asarray(codes).view(np.uint16).tobytes()
+    if mode == "int8":
+        return np.asarray(codes).tobytes()
+    return _pack_tern(np.asarray(codes))  # tern
+
+
+def encode_arena_leaf(leaf: SparseLeaf, mode: str, seg):
+    """Serialize one global-index arena message as an ARENA frame.
+
+    ``seg`` is the static per-tensor entry count tuple (sum == leaf.k).
+    Each segment's values quantize with their OWN scale through the same
+    jitted quantizer as ``quantize_message`` — so ``shipped`` (what the
+    decoder reconstructs) is bit-equal to the in-process stand-in.
+    Returns ``(frame_bytes, shipped_leaf)``.
+    """
+    seg = tuple(int(s) for s in seg)
+    k, size = int(leaf.k), int(leaf.size)
+    assert sum(seg) == k, (seg, k)
+    idx = np.asarray(leaf.indices).astype(index_dtype(size))
+    codes, scales, dq = [], [], []
+    off = 0
+    for s in seg:
+        c, sc, d = _quantize_parts(leaf.values[off:off + s], mode)
+        codes.append(np.asarray(c))
+        scales.append(float(sc))
+        dq.append(d)
+        off += s
+    body = _HEADER.pack(len(seg), MODES[mode], ARENA, k, size)
+    body += np.asarray(seg, np.uint32).tobytes()
+    if mode in ("int8", "tern"):
+        body += np.asarray(scales, np.float32).tobytes()
+    body += idx.tobytes() + _pack_values(np.concatenate(codes), mode)
+    # the dequantized segments ARE quantize_segments(values, mode, seg) —
+    # same jitted program per slice — so `shipped` costs no second pass
+    shipped = SparseLeaf(
+        values=dq[0] if len(dq) == 1 else jnp.concatenate(dq),
+        indices=leaf.indices, size=size)
+    return _LEN.pack(len(body)) + body, shipped
+
+
+def encode_leaf(leaf_id: int, leaf, mode: str = "none", seg=None):
     """Serialize one leaf; returns ``(frame_bytes, shipped_leaf)``.
 
     ``shipped_leaf`` is exactly what :func:`decode_leaf` on the far side
     reconstructs (the dequantized SparseLeaf, or the dense array verbatim)
     — callers use it to keep local state consistent with the receiver.
+    A SparseLeaf with ``seg`` travels as a segmented ARENA frame; without
+    it, as a legacy per-leaf SPARSE frame.
     """
+    if isinstance(leaf, SparseLeaf) and seg is not None:
+        return encode_arena_leaf(leaf, mode, seg)
     if isinstance(leaf, SparseLeaf):
         codes, scale, dq = _quantize_parts(leaf.values, mode)
         k, size = leaf.k, leaf.size
@@ -232,11 +333,24 @@ def encode_leaf(leaf_id: int, leaf, mode: str = "none"):
 
 
 def encode_message(msg_type: int, sender: int, seq: int, msgs=(),
-                   *, mode: str = "none", aux: float = 0.0):
-    """Serialize a full message; returns ``(payload, shipped_msgs)``."""
+                   *, mode: str = "none", seg=None, aux: float = 0.0):
+    """Serialize a full message; returns ``(payload, shipped_msgs)``.
+
+    ``msgs`` is the leaf list (the arena runtime ships exactly one leaf:
+    the global-index arena message); ``seg`` routes SparseLeaf leaves
+    through the segmented ARENA framing.
+    """
+    if isinstance(msgs, SparseLeaf) or not isinstance(msgs, (list, tuple)):
+        msgs = [msgs]
+    if seg is not None and sum(isinstance(m, SparseLeaf) for m in msgs) > 1:
+        # the ARENA header reuses the leaf_id field as n_seg, so an arena
+        # frame cannot carry a leaf id — a message holds at most ONE
+        # (decode would collapse several onto leaves[0])
+        raise ValueError("arena (seg=) messages carry exactly one "
+                         f"SparseLeaf; got {len(msgs)} leaves")
     frames, shipped = [], []
     for i, m in enumerate(msgs):
-        frame, s = encode_leaf(i, m, mode)
+        frame, s = encode_leaf(i, m, mode, seg)
         frames.append(frame)
         shipped.append(s)
     payload = _ENVELOPE.pack(msg_type, sender, seq, aux, len(frames))
@@ -257,6 +371,35 @@ def decode_leaf(buf, offset: int = 0):
     mode = MODE_NAMES[mode_c]
 
     idt = index_dtype(size)
+    if kind == ARENA:
+        n_seg = leaf_id  # ARENA frames reuse the leaf_id field as n_seg
+        seg = np.frombuffer(buf, np.uint32, n_seg, offset)
+        offset += seg.nbytes
+        scales = None
+        if mode in ("int8", "tern"):
+            scales = np.frombuffer(buf, np.float32, n_seg, offset)
+            offset += scales.nbytes
+        idx = np.frombuffer(buf, idt, k, offset).astype(np.int32)
+        offset += k * np.dtype(idt).itemsize
+        if mode == "none":
+            vals = np.frombuffer(buf, np.float32, k, offset).copy()
+        elif mode == "bf16":
+            vals = np.frombuffer(buf, np.uint16, k, offset) \
+                .view(ml_dtypes.bfloat16).astype(np.float32)
+        else:
+            if mode == "int8":
+                codes = np.frombuffer(buf, np.int8, k, offset)
+            else:  # tern
+                codes = _unpack_tern(bytes(buf[offset:end]), k)
+            vals = np.empty(k, np.float32)
+            off = 0
+            for s, sc in zip(seg, scales):
+                # same IEEE op per segment as the jitted `codes * scale`
+                vals[off:off + s] = codes[off:off + s].astype(np.float32) \
+                    * sc
+                off += s
+        return 0, SparseLeaf(values=jnp.asarray(vals),
+                             indices=jnp.asarray(idx), size=size), end
     if kind == DENSE:
         flat = np.frombuffer(buf, np.float32, size, offset).copy()
         return leaf_id, jnp.asarray(flat), end

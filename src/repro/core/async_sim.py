@@ -4,7 +4,8 @@ The paper's cluster is 32 GPU workers hitting one TCP parameter server at
 their own pace.  On a single host we reproduce the *algorithmic* behaviour
 exactly and deterministically:
 
-* every worker owns a local model copy + strategy state (velocity/residual),
+* every worker owns a local model copy + strategy state (velocity/residual)
+  — both packed into the flat parameter arena (core/paramspace.py),
 * a schedule (sequence of worker ids, derived from simulated heterogeneous
   worker speeds) fixes the global order in which workers reach the server,
 * each event executes: local backward on the worker's *stale* model ->
@@ -16,16 +17,19 @@ model that is many server-updates old — exactly the regime the paper's
 SAMomentum is designed to survive.
 
 Each event runs as four jitted stages — client compute, server
-receive+select, server commit, worker apply — the SAME jitted programs the
+receive+select, server commit, worker apply — the SAME stage functions the
 federated cluster runtime (repro.cluster) executes on either side of its
-wire, with the codec's quantizer between them.  That shared decomposition is
-what makes the simulator's losses bit-for-bit reproducible on the real
-transport; byte accounting is the codec's measured frame sizes
-(wire.frame_bytes), not an analytic formula.
+wire and the scan runner (core/scan_runner.py) compiles into its fused
+event body, with the codec's quantizer between them.  That shared
+decomposition is what makes the simulator's losses bit-for-bit reproducible
+on the real transport AND in the scan; byte accounting is the codec's
+measured frame sizes (wire.frame_bytes) — static per event for sparse
+messages, so it is computed ONCE per run (no per-event host sync).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -36,6 +40,7 @@ from . import engine as engine_lib
 from . import server as ps
 from .baselines import Strategy, msgd_step
 from .engine import CompressionSpec
+from .paramspace import ParamSpace
 
 
 def make_schedule(
@@ -50,16 +55,26 @@ def make_schedule(
     Worker service times are exponential with per-worker rates drawn
     lognormal(0, hetero); hetero=0 degenerates to round-robin-ish fair
     interleaving, larger hetero produces stragglers and thus higher staleness.
+
+    A heap-ordered event queue makes this O(n_events * log n_workers) — a
+    million-event schedule for the scalability sweeps generates in seconds
+    where the old per-event ``np.argmin`` scan was O(n_events * n_workers).
+    The draw sequence is identical to the argmin loop (one exponential per
+    event for the completing worker; ties resolve to the lowest worker id),
+    so schedules are bit-for-bit what they always were.
     """
     rng = np.random.default_rng(seed)
     speeds = np.exp(rng.normal(0.0, hetero, n_workers))
+    scale = 1.0 / speeds
     # next completion time per worker
-    t_next = rng.exponential(1.0 / speeds)
+    t_next = rng.exponential(scale)
+    heap = [(float(t_next[k]), k) for k in range(n_workers)]
+    heapq.heapify(heap)
     order = np.empty(n_events, dtype=np.int32)
     for e in range(n_events):
-        k = int(np.argmin(t_next))
+        t, k = heapq.heappop(heap)
         order[e] = k
-        t_next[k] += rng.exponential(1.0 / speeds[k])
+        heapq.heappush(heap, (t + rng.exponential(scale[k]), k))
     return order
 
 
@@ -72,14 +87,27 @@ class History(NamedTuple):
     evals: list                 # [(event_idx, metric), ...]
 
 
+def staleness_of(schedule, n_workers: int) -> np.ndarray:
+    """Per-event staleness (server updates since the worker last synced) —
+    a pure function of the schedule, shared by every runner."""
+    last_sync = np.zeros(n_workers, dtype=np.int64)
+    out = np.zeros(len(schedule), dtype=np.int64)
+    for e, k in enumerate(schedule):
+        out[e] = e - last_sync[k]
+        last_sync[k] = e + 1
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The four per-event stages, decomposed exactly as the cluster runtime runs
 # them (client compute | server receive+select | server commit | client
-# apply).  Both AsyncTrainer and repro.cluster jit THESE SAME functions, so
-# XLA compiles one identical program for each stage and the simulator is
-# bit-for-bit reproducible on the real runtime (tests/test_cluster.py).
-# Wire quantization happens BETWEEN stages via wire.quantize_message — the
-# codec's jitted quantizer — never inside the strategy jit.
+# apply).  AsyncTrainer and repro.cluster jit THESE SAME functions — and
+# core/scan_runner.py inlines the raw ``*_fn`` forms into its scan body —
+# so XLA compiles one identical op sequence for each stage and every runner
+# is bit-for-bit reproducible on every other (tests/test_cluster.py,
+# tests/test_scan_runner.py).  Wire quantization happens BETWEEN stages via
+# wire.quantize_message — the codec's jitted segment-wise quantizer — never
+# inside the strategy jit.
 # ---------------------------------------------------------------------------
 
 def strip_quantize(strategy: Strategy) -> Strategy:
@@ -91,23 +119,30 @@ def strip_quantize(strategy: Strategy) -> Strategy:
     return dataclasses.replace(strategy, quantize="none")
 
 
-def make_client_step(strategy: Strategy, grad_fn):
-    """jit(client compute): grads on the stale local model + strategy step.
+def client_step_fn(strategy: Strategy, grad_fn, space: ParamSpace):
+    """client compute: grads on the stale local model + strategy step.
 
-    Returns (new strategy state, loss, RAW upward message).
+    The worker model lives as a ``(total,)`` arena ``theta``; it is
+    unpacked to the parameter pytree only for ``grad_fn``.  Returns
+    (new strategy state, loss, RAW upward arena message).
     """
     strategy = strip_quantize(strategy)
 
-    def client_step(wparams, wstrat, batch, lr):
-        loss, grads = grad_fn(wparams, batch)
+    def client_step(theta, wstrat, batch, lr):
+        loss, grads = grad_fn(space.unpack(theta), batch)
         wstrat, msg = strategy.step(wstrat, grads, lr)
         return wstrat, loss, msg
 
-    return jax.jit(client_step)
+    return client_step
 
 
-def make_server_step(secondary_density, spec: CompressionSpec):
-    """jit(server): apply the upward message, select the RAW downward one."""
+def make_client_step(strategy: Strategy, grad_fn, space: ParamSpace):
+    """jit(client compute) over the arena model."""
+    return jax.jit(client_step_fn(strategy, grad_fn, space))
+
+
+def server_step_fn(secondary_density, spec: CompressionSpec):
+    """server: apply the upward message, select the RAW downward one."""
 
     def server_step(sstate, msg, worker_id):
         sstate = ps.receive(sstate, msg)
@@ -115,7 +150,13 @@ def make_server_step(secondary_density, spec: CompressionSpec):
                            secondary_density=secondary_density, spec=spec)
         return sstate, G
 
-    return jax.jit(server_step)
+    return server_step
+
+
+def make_server_step(secondary_density, spec: CompressionSpec):
+    """jit(server): one fused scatter in, one subtract + per-tensor select
+    out (the arena descriptor rides statically inside ServerState)."""
+    return jax.jit(server_step_fn(secondary_density, spec))
 
 
 def make_commit():
@@ -124,8 +165,8 @@ def make_commit():
 
 
 def make_apply():
-    """jit(worker apply): theta <- theta + G (Eq. 5)."""
-    return jax.jit(ps.apply_to_params)
+    """jit(worker apply): theta <- theta + G (Eq. 5) — one arena scatter."""
+    return jax.jit(ps.apply_update)
 
 
 @dataclasses.dataclass
@@ -144,8 +185,10 @@ class AsyncTrainer:
     secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC
 
     def init(self, params0):
+        space = ParamSpace.from_tree(params0)
+        theta0 = space.pack(params0)
         workers = [
-            {"params": params0, "strat": self.strategy.init(params0)}
+            {"theta": theta0, "strat": self.strategy.init(params0)}
             for _ in range(self.n_workers)
         ]
         return ps.init(params0, self.n_workers), workers
@@ -163,16 +206,26 @@ class AsyncTrainer:
         """Run the full schedule.  batch_fn(event_idx, worker_id) -> batch."""
         from repro.cluster import wire  # codec quantizer + byte accounting
 
+        space = ParamSpace.from_tree(params0)
         sstate, workers = self.init(params0)
-        client_step = make_client_step(self.strategy, self.grad_fn)
+        client_step = make_client_step(self.strategy, self.grad_fn, space)
         server_step = make_server_step(self.secondary_density,
                                        self.secondary_spec)
         commit, apply_G = make_commit(), make_apply()
         up_mode = self.strategy.quantize
         down_mode = self.secondary_spec.quantize
-        last_sync = np.zeros(self.n_workers, dtype=np.int64)
+        up_seg = self.strategy.message_seg(space)
+        down_seg = (space.ks(self.secondary_density)
+                    if self.secondary_density is not None else None)
+        # frame sizes are static per (mode, seg, total) for sparse messages:
+        # memoize the per-event cost once instead of re-deriving it from
+        # on-device message structure every event (which cost a host sync);
+        # dense messages stay per-event (their nnz is data-dependent)
+        up_cost = (wire.frame_bytes_static(up_seg, space.total, up_mode)
+                   if up_seg is not None else None)
+        down_cost = (wire.frame_bytes_static(down_seg, space.total, down_mode)
+                     if down_seg is not None else None)
         losses = np.zeros(len(schedule), dtype=np.float64)
-        staleness = np.zeros(len(schedule), dtype=np.int64)
         up_bytes = down_bytes = 0
         evals = []
         for e, k in enumerate(schedule):
@@ -180,18 +233,18 @@ class AsyncTrainer:
             lr = self.lr if lr_fn is None else float(lr_fn(e))
             batch = batch_fn(e, k)
             wst, loss, msg = client_step(
-                workers[k]["params"], workers[k]["strat"], batch, lr)
-            msg = wire.quantize_message(msg, up_mode)
+                workers[k]["theta"], workers[k]["strat"], batch, lr)
+            msg = wire.quantize_message(msg, up_mode, seg=up_seg)
             sstate, G = server_step(sstate, msg, jnp.int32(k))
-            G = wire.quantize_message(G, down_mode)
+            G = wire.quantize_message(G, down_mode, seg=down_seg)
             sstate = commit(sstate, jnp.int32(k), G)
-            workers[k]["params"] = apply_G(workers[k]["params"], G)
+            workers[k]["theta"] = apply_G(workers[k]["theta"], G)
             workers[k]["strat"] = wst
             losses[e] = float(loss)
-            staleness[e] = e - last_sync[k]
-            last_sync[k] = e + 1
-            up_bytes += wire.frame_bytes(msg, mode=up_mode)
-            down_bytes += wire.frame_bytes(G, mode=down_mode)
+            up_bytes += (up_cost if up_cost is not None
+                         else wire.frame_bytes(msg, mode=up_mode))
+            down_bytes += (down_cost if down_cost is not None
+                           else wire.frame_bytes(G, mode=down_mode))
             if eval_fn is not None and eval_every and (e + 1) % eval_every == 0:
                 model = ps.global_model(params0, sstate)
                 evals.append((e + 1, eval_fn(model)))
@@ -199,7 +252,7 @@ class AsyncTrainer:
         hist = History(
             losses=losses,
             worker_ids=np.asarray(schedule),
-            staleness=staleness,
+            staleness=staleness_of(schedule, self.n_workers),
             up_bytes=up_bytes,
             down_bytes=down_bytes,
             evals=evals,

@@ -7,17 +7,22 @@ adding model difference based compression as in our DGS").
 
 A strategy owns only the *worker-side* state and the upward message:
 
-    init(params)                 -> state pytree
+    init(params)                 -> state (arena-shaped pytree)
     step(state, grads, lr)       -> (state', msg)
 
-msg is either a list[SparseLeaf] (sparsified strategies) or a list of flat
-dense arrays (ASGD).  The message always includes the learning rate (the
-server applies it verbatim: M <- M - decode(msg)).
+State and messages live in the flat parameter arena (core/paramspace.py):
+``msg`` is either ONE global-index SparseLeaf over the packed arena
+(sparsified strategies — per-tensor top-k on offset-sliced views, indices
+rebased by leaf offset) or ONE dense flat ``(total,)`` array (ASGD).  The
+message always includes the learning rate (the server applies it verbatim:
+M <- M - decode(msg)).
 
 All top-k selection goes through core/engine.py: every sparse strategy has
 an ``engine`` knob ("exact" | "sampled" | "blockwise" | "auto") and a
 ``quantize`` wire-quantization knob — they compose uniformly instead of
-being DGS-only (DESIGN.md §Compression-engine).
+being DGS-only (DESIGN.md §Compression-engine).  ``message_seg`` exposes
+the static per-tensor entry counts of the message (the wire codec's arena
+frame segmentation).
 """
 from __future__ import annotations
 
@@ -30,11 +35,11 @@ import jax.numpy as jnp
 from . import engine as engine_lib
 from . import samomentum
 from .engine import CompressionSpec
-from .sparsify import density_to_k
+from .paramspace import ParamSpace
 
 
 class StrategyState(NamedTuple):
-    inner: Any  # strategy-specific pytree
+    inner: Any  # strategy-specific pytree (arena vectors)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,11 +59,28 @@ class Strategy:
         """Wire bits per message value (byte accounting in async_sim)."""
         return self.spec.value_bits
 
+    def message_seg(self, space: ParamSpace) -> tuple[int, ...] | None:
+        """Static per-tensor entry counts of the upward message, or None
+        for dense messages.  This is the arena wire frame's segmentation
+        AND the per-segment quantization boundaries."""
+        return None
+
     def init(self, params) -> StrategyState:
         raise NotImplementedError
 
     def step(self, state: StrategyState, grads, lr: float):
         raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class _SparseStrategy(Strategy):
+    """Shared plumbing for density-parameterized sparse strategies."""
+
+    sparse: bool = True
+    density: float = 0.01
+
+    def message_seg(self, space: ParamSpace) -> tuple[int, ...]:
+        return space.ks(self.density)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,102 +94,79 @@ class ASGD(Strategy):
         return StrategyState(inner=())
 
     def step(self, state, grads, lr):
-        msg = [lr * g.reshape(-1).astype(jnp.float32) for g in jax.tree.leaves(grads)]
-        return state, msg
+        space = ParamSpace.from_tree(grads)
+        return state, lr * space.pack(grads)
 
 
 @dataclasses.dataclass(frozen=True)
-class GDAsync(Strategy):
+class GDAsync(_SparseStrategy):
     """Gradient Dropping (Aji & Heafield 2017), async port.
 
-    Residual accumulation of raw (lr-scaled) gradients; top-k of the residual
-    is sent; the remainder stays local (Alg. 1).  No momentum correction —
-    this is the baseline whose convergence the paper shows degrading.
+    Residual accumulation of raw (lr-scaled) gradients in one arena buffer;
+    per-tensor top-k of the residual is sent; the remainder stays local
+    (Alg. 1).  No momentum correction — this is the baseline whose
+    convergence the paper shows degrading.
     """
 
     name: str = "gd_async"
-    sparse: bool = True
-    density: float = 0.01
 
     def init(self, params):
-        resid = jax.tree.map(
-            lambda p: jnp.zeros((int(p.size),), jnp.float32), params
-        )
-        return StrategyState(inner=resid)
+        space = ParamSpace.from_tree(params)
+        return StrategyState(inner=jnp.zeros((space.total,), jnp.float32))
 
     def step(self, state, grads, lr):
-        spec = self.spec
-        resid_leaves, treedef = jax.tree.flatten(state.inner)
-        g_leaves = jax.tree.leaves(grads)
-        msgs, new_resid = [], []
-        for r, g in zip(resid_leaves, g_leaves):
-            r = r + lr * g.reshape(-1).astype(jnp.float32)
-            k = density_to_k(int(r.shape[0]), self.density)
-            msg = engine_lib.select(r, k, spec)
-            msgs.append(msg)
-            new_resid.append(r.at[msg.indices].set(0.0))
-        return StrategyState(inner=jax.tree.unflatten(treedef, new_resid)), msgs
+        space = ParamSpace.from_tree(grads)
+        r = state.inner + lr * space.pack(grads)
+        msg = space.select(r, space.ks(self.density), self.spec)
+        return StrategyState(inner=r.at[msg.indices].set(0.0)), msg
 
 
 class _DGCState(NamedTuple):
-    velocity: Any   # momentum-corrected velocity, per-leaf flat
-    residual: Any   # accumulated unsent velocity, per-leaf flat
+    velocity: jax.Array   # momentum-corrected velocity arena (total,)
+    residual: jax.Array   # accumulated unsent velocity arena (total,)
 
 
 @dataclasses.dataclass(frozen=True)
-class DGCAsync(Strategy):
+class DGCAsync(_SparseStrategy):
     """Deep Gradient Compression (Lin et al. 2017), async port.
 
     Momentum correction: velocity u = m*u + lr*g accumulates into a residual
-    r += u; top-k of r is sent; *both* u and r are zeroed on sent coordinates
-    (momentum factor masking).  Needs two buffers (contrast SAMomentum's one).
+    r += u; per-tensor top-k of r is sent; *both* u and r are zeroed on sent
+    coordinates (momentum factor masking) with one arena scatter each.
+    Needs two buffers (contrast SAMomentum's one).
     """
 
     name: str = "dgc_async"
-    sparse: bool = True
-    density: float = 0.01
     momentum: float = 0.7
     clip_norm: float | None = None
 
     def init(self, params):
-        z = jax.tree.map(lambda p: jnp.zeros((int(p.size),), jnp.float32), params)
+        space = ParamSpace.from_tree(params)
+        z = jnp.zeros((space.total,), jnp.float32)
         return StrategyState(inner=_DGCState(velocity=z, residual=z))
 
     def step(self, state, grads, lr):
-        spec = self.spec
-        u_leaves, treedef = jax.tree.flatten(state.inner.velocity)
-        r_leaves = jax.tree.leaves(state.inner.residual)
-        g_leaves = jax.tree.leaves(grads)
+        space = ParamSpace.from_tree(grads)
+        g = space.pack(grads)
         if self.clip_norm is not None:
-            gnorm = jnp.sqrt(
-                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in g_leaves)
-            )
-            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
-            g_leaves = [g * scale for g in g_leaves]
-        msgs, new_u, new_r = [], [], []
-        for u, r, g in zip(u_leaves, r_leaves, g_leaves):
-            u = engine_lib.velocity_accumulate(
-                u, g.reshape(-1).astype(jnp.float32),
-                momentum=self.momentum, lr=lr)
-            r = r + u
-            k = density_to_k(int(r.shape[0]), self.density)
-            msg = engine_lib.select(r, k, spec)
-            msgs.append(msg)
-            new_r.append(r.at[msg.indices].set(0.0))
-            new_u.append(u.at[msg.indices].set(0.0))  # momentum factor masking
+            # per-leaf partial sums, matching the pre-arena accumulation
+            # order bit-for-bit
+            gnorm = jnp.sqrt(sum(jnp.sum(v ** 2) for v in space.views(g)))
+            g = g * jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+        u = engine_lib.velocity_accumulate(
+            state.inner.velocity, g, momentum=self.momentum, lr=lr)
+        r = state.inner.residual + u
+        msg = space.select(r, space.ks(self.density), self.spec)
         return (
-            StrategyState(
-                inner=_DGCState(
-                    velocity=jax.tree.unflatten(treedef, new_u),
-                    residual=jax.tree.unflatten(treedef, new_r),
-                )
-            ),
-            msgs,
+            StrategyState(inner=_DGCState(
+                velocity=u.at[msg.indices].set(0.0),  # momentum factor mask
+                residual=r.at[msg.indices].set(0.0))),
+            msg,
         )
 
 
 @dataclasses.dataclass(frozen=True)
-class DGS(Strategy):
+class DGS(_SparseStrategy):
     """Ours: SAMomentum worker (paper Algorithm 3). One buffer, no residual.
 
     ``quantize`` composes wire quantization with the sparse message — the
@@ -177,15 +176,13 @@ class DGS(Strategy):
     """
 
     name: str = "dgs"
-    sparse: bool = True
-    density: float = 0.01
     momentum: float = 0.7
 
     def init(self, params):
         return StrategyState(inner=samomentum.init(params))
 
     def step(self, state, grads, lr):
-        msgs, new_sam = samomentum.tree_update(
+        msg, new_sam = samomentum.tree_update(
             state.inner,
             grads,
             momentum=self.momentum,
@@ -193,11 +190,11 @@ class DGS(Strategy):
             density=self.density,
             spec=self.spec,
         )
-        return StrategyState(inner=new_sam), msgs
+        return StrategyState(inner=new_sam), msg
 
 
 @dataclasses.dataclass(frozen=True)
-class DGSPlain(Strategy):
+class DGSPlain(_SparseStrategy):
     """Paper Algorithm 1: DGS transport without SAMomentum (residual top-k).
 
     Worker-side identical to GDAsync; kept as a distinct named strategy so
@@ -205,8 +202,6 @@ class DGSPlain(Strategy):
     """
 
     name: str = "dgs_plain"
-    sparse: bool = True
-    density: float = 0.01
 
     def _delegate(self) -> GDAsync:
         return GDAsync(density=self.density, engine=self.engine,

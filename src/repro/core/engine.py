@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from .sparsify import (
     SparseLeaf,
     quantize_dequantize,
+    quantize_segments,
     sampled_threshold,
     topk_select,
 )
@@ -438,6 +439,44 @@ def _samomentum_step_blockwise(u, g, eng: BlockwiseEngine, *, momentum, lr,
                               -msg.values, interpret=eng.interpret)
     u_new = u_new.reshape(-1) + extra * (1.0 / momentum - 1.0)
     return msg, u_new.reshape(u.shape)
+
+
+def quantize_arena(msg: SparseLeaf, mode: str, seg) -> SparseLeaf:
+    """Wire-quantize a global-index arena message SEGMENT-WISE.
+
+    ``seg`` is the per-tensor entry count (``ParamSpace.ks(density)``): each
+    original tensor's slice of the concatenated value vector gets its own
+    scale, exactly like the old per-leaf messages — so arena and per-leaf
+    paths are bit-equal under every quantize mode.
+    """
+    if mode == "none":
+        return msg
+    return SparseLeaf(values=quantize_segments(msg.values, mode, seg),
+                      indices=msg.indices, size=msg.size)
+
+
+def samomentum_step_arena(u, g, space, *, momentum: float, lr: float,
+                          ks, spec: CompressionSpec = DEFAULT_SPEC):
+    """SAMomentum over a packed arena: per-tensor steps, one global message.
+
+    ``u``/``g`` are ``(space.total,)`` arenas.  Each leaf view runs the
+    SAME :func:`samomentum_step` as the per-leaf path (bit-equal across
+    every engine, including the fused blockwise Pallas path); per-leaf
+    message indices are rebased by the leaf offset and concatenated into
+    one global-index SparseLeaf, and the rescaled velocity views
+    concatenate back into one arena.
+    """
+    vals, idxs, new_u = [], [], []
+    for off, k, u_view, g_view in zip(
+            space.offsets, ks, space.views(u), space.views(g)):
+        msg, u_new = samomentum_step(u_view, g_view, momentum=momentum,
+                                     lr=lr, k=k, spec=spec)
+        vals.append(msg.values)
+        idxs.append(msg.indices + jnp.int32(off))
+        new_u.append(u_new.reshape(-1))
+    return (SparseLeaf(values=jnp.concatenate(vals),
+                       indices=jnp.concatenate(idxs), size=space.total),
+            jnp.concatenate(new_u))
 
 
 def samomentum_step_rows(u2d, g2d, *, momentum: float, lr: float, k: int,

@@ -1,0 +1,141 @@
+"""The flat parameter arena: ONE packed buffer behind every DGS data path.
+
+Every layer of the pipeline used to iterate a Python list of per-leaf flat
+vectors — one small scatter per leaf per event for server ``M``/``v_k``
+bookkeeping, worker apply, and the wire.  Real gradient-compression systems
+fuse per-tensor messages into contiguous buckets precisely to kill that
+per-tensor dispatch overhead (Deep Gradient Compression; Sparse
+Communication for Training Deep Networks).  This module is the descriptor
+that makes the fusion possible while keeping the paper's semantics:
+
+* :class:`ParamSpace` — a STATIC descriptor of a parameter pytree: treedef,
+  per-leaf shapes/dtypes/sizes and their offsets into one contiguous f32
+  arena of ``total`` elements.  Registered as a static pytree node, so it
+  can ride inside jitted state (``ServerState.space``) at zero trace cost.
+* ``pack``/``unpack`` — pytree <-> ``(total,)`` f32 arena, leaf order =
+  ``jax.tree.leaves`` order (offsets are the running sum of leaf sizes).
+* ``select`` — paper-faithful PER-TENSOR top-k (Algorithm 1 line 8 selects
+  a threshold per parameter tensor ``j``) through the pluggable engine
+  registry of :mod:`repro.core.engine`, run on offset-sliced views of the
+  arena; the per-leaf indices are REBASED by the leaf offset and the
+  per-leaf selections concatenated into one global-index
+  :class:`~repro.core.sparsify.SparseLeaf` over the whole arena.  The
+  index-rebasing rule: ``global_index = leaf_offset + local_index``; leaf
+  ranges are disjoint, so one scatter-add applies every tensor's update.
+* ``split`` — the inverse view for tests/inspection: a global arena
+  message back into per-leaf ``SparseLeaf``s with local indices.
+
+Selection stays per-tensor (bit-equal to the old per-leaf path, enforced in
+tests/test_paramspace.py); only the *bookkeeping* — server receive/commit,
+worker apply, the wire frame — is fused into single-buffer operations.
+A single flat buffer also shards trivially (contiguous ranges per host),
+which per-leaf lists never did.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine as engine_lib
+from .engine import CompressionSpec
+from .sparsify import SparseLeaf, density_to_k
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ParamSpace:
+    """Static descriptor of a parameter pytree packed into one f32 arena."""
+
+    treedef: Any                         # jax PyTreeDef (hashable)
+    shapes: tuple[tuple[int, ...], ...]  # per-leaf original shapes
+    dtypes: tuple[str, ...]              # per-leaf original dtype names
+    sizes: tuple[int, ...]               # per-leaf element counts
+    offsets: tuple[int, ...]             # per-leaf start offsets in the arena
+    total: int                           # arena length == sum(sizes)
+
+    @classmethod
+    def from_tree(cls, tree) -> "ParamSpace":
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                      for s in shapes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+        dtypes = tuple(str(jnp.asarray(l).dtype) for l in leaves)
+        return cls(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                   sizes=sizes, offsets=offsets, total=int(sum(sizes)))
+
+    # -- layout ------------------------------------------------------------
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    def ks(self, density: float) -> tuple[int, ...]:
+        """Static per-leaf top-k counts for a density (the paper's per-tensor
+        ``R%`` rule) — doubles as the message segmentation ``seg``."""
+        return tuple(density_to_k(s, density) for s in self.sizes)
+
+    def views(self, flat: jax.Array) -> list:
+        """Per-leaf flat views of the arena (zero-copy slices)."""
+        return [jax.lax.slice_in_dim(flat, off, off + size)
+                for off, size in zip(self.offsets, self.sizes)]
+
+    # -- pack / unpack -----------------------------------------------------
+
+    def pack(self, tree) -> jax.Array:
+        """Pytree -> one contiguous ``(total,)`` f32 arena."""
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate(
+            [jnp.asarray(l).reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unpack(self, flat: jax.Array):
+        """Arena -> pytree with the original shapes and dtypes."""
+        out = [v.reshape(shape).astype(dtype)
+               for v, shape, dtype in zip(self.views(flat), self.shapes,
+                                          self.dtypes)]
+        return jax.tree.unflatten(self.treedef, out)
+
+    # -- global-COO selection / splitting ----------------------------------
+
+    def select(self, x: jax.Array, ks, spec: CompressionSpec
+               = engine_lib.DEFAULT_SPEC) -> SparseLeaf:
+        """Per-tensor top-k of an arena vector, rebased to global indices.
+
+        Each leaf's view goes through the engine registry exactly as the
+        per-leaf path did (including per-segment wire quantization from
+        ``spec.quantize`` — one scale per TENSOR, not per message, so the
+        arithmetic is bit-equal to per-leaf messages); the results
+        concatenate into one global-index SparseLeaf over the arena.
+        """
+        vals, idxs = [], []
+        for off, k, view in zip(self.offsets, ks, self.views(x)):
+            leaf = engine_lib.select(view, k, spec)
+            vals.append(leaf.values)
+            idxs.append(leaf.indices + jnp.int32(off))
+        return SparseLeaf(values=jnp.concatenate(vals),
+                          indices=jnp.concatenate(idxs), size=self.total)
+
+    def split(self, msg, seg=None) -> list:
+        """Arena message -> per-leaf list (local indices) for inspection.
+
+        ``seg`` is the per-leaf entry count of a sparse message (defaults
+        to nothing sensible — pass the segmentation the message was built
+        with, e.g. ``space.ks(density)``).  Dense arena vectors split into
+        per-leaf flat views.
+        """
+        if not isinstance(msg, SparseLeaf):
+            return self.views(msg)
+        if seg is None:
+            raise ValueError("splitting a sparse arena message needs seg=")
+        out, pos = [], 0
+        for off, size, k in zip(self.offsets, self.sizes, seg):
+            out.append(SparseLeaf(values=msg.values[pos:pos + k],
+                                  indices=msg.indices[pos:pos + k]
+                                  - jnp.int32(off),
+                                  size=size))
+            pos += k
+        return out

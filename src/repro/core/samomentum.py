@@ -35,15 +35,16 @@ import jax.numpy as jnp
 
 from . import engine
 from .engine import CompressionSpec
-from .sparsify import density_to_k
+from .paramspace import ParamSpace
 
 
 class SAMomentumState(NamedTuple):
-    velocity: object  # pytree like params
+    velocity: jax.Array  # (total,) f32 velocity arena (paramspace layout)
 
 
 def init(params) -> SAMomentumState:
-    return SAMomentumState(velocity=jax.tree.map(jnp.zeros_like, params))
+    space = ParamSpace.from_tree(params)
+    return SAMomentumState(velocity=jnp.zeros((space.total,), jnp.float32))
 
 
 def leaf_update(
@@ -76,17 +77,17 @@ def tree_update(
     density: float,
     spec: CompressionSpec = engine.EXACT_SPEC,
 ):
-    """Per-leaf SAMomentum over a gradient pytree.
+    """SAMomentum over a gradient pytree in the flat arena.
 
-    Returns (msgs: list[SparseLeaf] in jax.tree.leaves order, new_state).
+    Selection stays per-tensor (paper Alg. 1 line 8 thresholds each
+    parameter tensor separately) via arena views; the velocity is ONE
+    packed buffer and the message ONE global-index SparseLeaf with indices
+    rebased by leaf offset (DESIGN.md §8).
+
+    Returns (msg: global-index SparseLeaf over the arena, new_state).
     """
-    u_leaves, treedef = jax.tree.flatten(state.velocity)
-    g_leaves = jax.tree.leaves(grads)
-    msgs, new_u = [], []
-    for u_prev, g in zip(u_leaves, g_leaves):
-        k = density_to_k(int(u_prev.size), density)
-        msg, u = leaf_update(u_prev, g, momentum=momentum, lr=lr, k=k,
-                             spec=spec)
-        msgs.append(msg)
-        new_u.append(u)
-    return msgs, SAMomentumState(velocity=jax.tree.unflatten(treedef, new_u))
+    space = ParamSpace.from_tree(grads)
+    msg, u_new = engine.samomentum_step_arena(
+        state.velocity, space.pack(grads), space,
+        momentum=momentum, lr=lr, ks=space.ks(density), spec=spec)
+    return msg, SAMomentumState(velocity=u_new)

@@ -14,48 +14,63 @@ Downward: G_k <- M - v_k ;  v_k <- v_k + G_k        (Eq. 3/4)
           G_k <- sparse(M - v_k) ; v_k <- v_k + G_k  (remainder implicitly
           accumulates in (M - v_k) and ships once large enough)
 
-Everything is stored per-leaf as flat f32 vectors so the same code path
-serves every architecture's parameter pytree.
+State lives in the FLAT PARAMETER ARENA (core/paramspace.py, DESIGN.md §8):
+``M`` is one contiguous ``(total,)`` f32 buffer and ``v`` one
+``(n_workers, total)`` buffer; messages are a single global-index
+:class:`~repro.core.sparsify.SparseLeaf` over the arena (or one dense
+``(total,)`` vector).  Receive, commit, and worker apply are therefore ONE
+fused scatter-add each (``kernels.ops.scatter_add`` — the Pallas blocked
+kernel on TPU) instead of one small scatter per tensor per event.
+Secondary *selection* stays paper-faithful per-tensor top-k: the arena is
+offset-sliced back into leaf views, each selected through the engine
+registry, and the indices rebased by leaf offset (``ParamSpace.select``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import engine as engine_lib
 from .engine import CompressionSpec
-from .sparsify import (
-    SparseLeaf,
-    density_to_k,
-    sparse_accumulate,
-)
+from .paramspace import ParamSpace
+from .sparsify import SparseLeaf
+
+
+def _scatter_add(dense: jax.Array, idx: jax.Array, vals: jax.Array):
+    from repro.kernels import ops
+    return ops.scatter_add(dense, idx, vals)
+
+
+def _scatter_add_row(dense2d, row, idx, vals):
+    from repro.kernels import ops
+    return ops.scatter_add_row(dense2d, row, idx, vals)
 
 
 class ServerState(NamedTuple):
-    M: tuple          # tuple of flat (size,) arrays, one per param leaf
-    v: tuple          # tuple of (n_workers, size) arrays
-    t: jax.Array      # scalar int32 update timestamp
+    M: jax.Array        # (total,) f32 arena
+    v: jax.Array        # (n_workers, total) f32
+    t: jax.Array        # scalar int32 update timestamp
+    space: ParamSpace   # static arena descriptor (registered-static pytree)
 
 
 def init(params, n_workers: int) -> ServerState:
-    leaves = [l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(params)]
-    M = tuple(jnp.zeros_like(l) for l in leaves)
-    v = tuple(jnp.zeros((n_workers, l.shape[0]), l.dtype) for l in leaves)
-    return ServerState(M=M, v=v, t=jnp.zeros((), jnp.int32))
+    space = ParamSpace.from_tree(params)
+    return ServerState(M=jnp.zeros((space.total,), jnp.float32),
+                       v=jnp.zeros((n_workers, space.total), jnp.float32),
+                       t=jnp.zeros((), jnp.int32),
+                       space=space)
 
 
 def receive(state: ServerState, msg) -> ServerState:
-    """Apply one worker's (sparse or dense) update message to M."""
-    new_M = []
-    for M_leaf, m in zip(state.M, msg):
-        if isinstance(m, SparseLeaf):
-            new_M.append(M_leaf.at[m.indices].add(-m.values))
-        else:  # dense flat array (ASGD)
-            new_M.append(M_leaf - m)
-    return ServerState(M=tuple(new_M), v=state.v, t=state.t + 1)
+    """Apply one worker's (sparse or dense) arena update message to M."""
+    if isinstance(msg, SparseLeaf):
+        new_M = _scatter_add(state.M, msg.indices, -msg.values)
+    else:  # dense flat arena (ASGD)
+        new_M = state.M - msg
+    return state._replace(M=new_M, t=state.t + 1)
 
 
 def send_select(
@@ -72,33 +87,26 @@ def send_select(
     :func:`send_commit` is then fed exactly what the client decoded, so
     server bookkeeping always tracks the shipped bits.
     """
+    diff = state.M - state.v[worker_id]
+    if secondary_density is None:
+        return diff
     spec_raw = dataclasses.replace(spec, quantize="none")
-    G = []
-    for M_leaf, v_leaf in zip(state.M, state.v):
-        diff = M_leaf - v_leaf[worker_id]
-        if secondary_density is None:
-            G.append(diff)
-        else:
-            k = density_to_k(int(diff.shape[0]), secondary_density)
-            G.append(engine_lib.select(diff, k, spec_raw))
-    return G
+    return state.space.select(diff, state.space.ks(secondary_density),
+                              spec_raw)
 
 
 def send_commit(state: ServerState, worker_id, G) -> ServerState:
     """Account the SHIPPED message into v_k (Eq. 4).
 
     ``G`` must be what the worker actually receives — after any wire
-    quantization.  Dense leaves mean "everything": v_k snaps to M exactly
+    quantization.  A dense G means "everything": v_k snaps to M exactly
     (``v + (M - v)`` would lose bits to f32 cancellation).
     """
-    new_v = []
-    for M_leaf, v_leaf, g in zip(state.M, state.v, G):
-        if isinstance(g, SparseLeaf):
-            new_v.append(v_leaf.at[worker_id].set(
-                sparse_accumulate(v_leaf[worker_id], g)))
-        else:
-            new_v.append(v_leaf.at[worker_id].set(M_leaf))
-    return ServerState(M=tuple(state.M), v=tuple(new_v), t=state.t)
+    if isinstance(G, SparseLeaf):
+        new_v = _scatter_add_row(state.v, worker_id, G.indices, G.values)
+    else:
+        new_v = state.v.at[worker_id].set(state.M)
+    return state._replace(v=new_v)
 
 
 def send(
@@ -110,70 +118,60 @@ def send(
 ):
     """Produce the model-difference message G_k for ``worker_id``.
 
-    Returns (new_state, G) where G is a list of dense flat arrays (no
-    secondary compression — G is *implicitly* sparse, we account its true nnz
-    for communication metrics) or a list of SparseLeaf (secondary
-    compression, Alg. 2 lines 5-11, selected through the compression engine
-    named by ``spec``).  Composition of :func:`send_select` + in-spec wire
-    quantization + :func:`send_commit`.
+    Returns (new_state, G) where G is one dense ``(total,)`` arena vector
+    (no secondary compression — G is *implicitly* sparse, its true nnz is
+    accounted for communication metrics) or one global-index SparseLeaf
+    (secondary compression, Alg. 2 lines 5-11, per-tensor selection through
+    the engine named by ``spec``).  Composition of :func:`send_select` +
+    in-spec wire quantization + :func:`send_commit`.
     """
-    G_raw = send_select(state, worker_id,
-                        secondary_density=secondary_density, spec=spec)
-    G = [engine_lib.quantize_leaf(g, spec.quantize)
-         if isinstance(g, SparseLeaf) else g for g in G_raw]
+    G = send_select(state, worker_id,
+                    secondary_density=secondary_density, spec=spec)
+    if isinstance(G, SparseLeaf):
+        G = engine_lib.quantize_arena(G, spec.quantize,
+                                      state.space.ks(secondary_density))
     return send_commit(state, worker_id, G), G
 
 
 def add_worker(state: ServerState) -> tuple[ServerState, int]:
-    """Grow every v leaf by one zero row (elastic join); returns the slot.
+    """Grow v by one zero row (elastic join); returns the new slot id.
 
     A fresh slot has v_k = 0, so a joining client starting from theta_0 is
     brought fully up to date by its first downward message (G = M - 0).
     """
-    new_id = int(state.v[0].shape[0])
-    new_v = tuple(
-        jnp.concatenate([v, jnp.zeros((1, v.shape[1]), v.dtype)])
-        for v in state.v)
-    return ServerState(M=state.M, v=new_v, t=state.t), new_id
+    new_id = int(state.v.shape[0])
+    new_v = jnp.concatenate(
+        [state.v, jnp.zeros((1, state.v.shape[1]), state.v.dtype)])
+    return state._replace(v=new_v), new_id
 
 
 def reset_worker(state: ServerState, worker_id: int) -> ServerState:
     """Zero a departed worker's v row so the slot can serve a new client
     (which starts from theta_0 and must receive all of M on first send)."""
-    new_v = tuple(v.at[worker_id].set(0.0) for v in state.v)
-    return ServerState(M=state.M, v=new_v, t=state.t)
+    return state._replace(v=state.v.at[worker_id].set(0.0))
+
+
+def apply_update(theta: jax.Array, G) -> jax.Array:
+    """Worker-side arena update  theta <- theta + G  (Eq. 5) — ONE scatter."""
+    if isinstance(G, SparseLeaf):
+        return _scatter_add(theta, G.indices, G.values)
+    return theta + G.astype(theta.dtype)
 
 
 def apply_to_params(params, G):
-    """Worker-side model update  theta <- theta + G  (Eq. 5)."""
-    leaves, treedef = jax.tree.flatten(params)
-    out = []
-    for p, g in zip(leaves, G):
-        if isinstance(g, SparseLeaf):
-            flat = p.reshape(-1)
-            flat = flat.at[g.indices].add(g.values.astype(p.dtype))
-            out.append(flat.reshape(p.shape))
-        else:
-            out.append((p.reshape(-1) + g.astype(p.dtype)).reshape(p.shape))
-    return jax.tree.unflatten(treedef, out)
+    """Pytree convenience wrapper around :func:`apply_update`."""
+    space = ParamSpace.from_tree(params)
+    return space.unpack(apply_update(space.pack(params), G))
 
 
 def global_model(params0, state: ServerState):
     """theta_t = theta_0 + M_t (Eq. 2) — used by tests and evaluation."""
-    leaves, treedef = jax.tree.flatten(params0)
-    out = [
-        (p.reshape(-1) + M.astype(p.dtype)).reshape(p.shape)
-        for p, M in zip(leaves, state.M)
-    ]
-    return jax.tree.unflatten(treedef, out)
+    space = state.space
+    return space.unpack(space.pack(params0) + state.M)
 
 
 def message_nnz(G) -> int:
     """True non-zero count of a downward message (comm accounting)."""
-    total = 0
-    for g in G:
-        if isinstance(g, SparseLeaf):
-            total += int(g.values.shape[0])
-        else:
-            total += int(jnp.sum(g != 0.0))
-    return total
+    if isinstance(G, SparseLeaf):
+        return int(G.values.shape[0])
+    return int(jnp.sum(G != 0.0))

@@ -23,7 +23,6 @@ should go through the engine layer rather than these directly:
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 from typing import NamedTuple
 
@@ -179,7 +178,14 @@ def tree_desparsify(msgs, tree_like):
 
 
 def message_bytes(msgs, *, index_bytes: int = 4) -> int:
-    """Wire size of a sparse message list (values + indices)."""
+    """Nominal wire size of a sparse message (values + indices).
+
+    Accepts one arena SparseLeaf or a list of per-leaf messages.  This is
+    the analytic f32+int accounting used by microbenches; the cluster
+    codec's measured framing lives in ``repro.cluster.wire``.
+    """
+    if isinstance(msgs, SparseLeaf):
+        msgs = [msgs]
     total = 0
     for m in msgs:
         total += m.values.size * m.values.dtype.itemsize
@@ -250,3 +256,24 @@ def quantize_dequantize(values: jax.Array, mode: str):
     """Quantize sparse message values for the wire; returns (dequantized
     values, bits per value).  See :func:`quantize_parts` for the modes."""
     return quantize_parts(values, mode)[2], QUANTIZE_BITS[mode]
+
+
+def quantize_segments(values: jax.Array, mode: str, seg) -> jax.Array:
+    """Segment-wise wire quantization of a concatenated value vector.
+
+    ``seg`` is the static per-segment length tuple (one segment per original
+    parameter tensor of an arena message).  Each segment is quantized
+    INDEPENDENTLY through the same jitted :func:`quantize_parts` program the
+    codec's encoder uses — one scale per tensor, exactly like the per-leaf
+    message path, so arena messages are bit-equal to per-leaf ones.
+    """
+    if mode == "none":
+        return values
+    if len(seg) == 1:
+        return quantize_parts(values, mode)[2]
+    parts, off = [], 0
+    for s in seg:
+        parts.append(quantize_parts(
+            jax.lax.slice_in_dim(values, off, off + s), mode)[2])
+        off += s
+    return jnp.concatenate(parts)

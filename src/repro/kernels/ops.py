@@ -75,6 +75,38 @@ def hierarchical_topk(x, *, k: int, r: int | None = None,
     return cvals[sel], cidx[sel]
 
 
+def scatter_add(dense, indices, values, *, interpret: bool | None = None):
+    """One fused scatter-add on a flat arena: ``dense.at[indices].add(v)``.
+
+    The single entry point behind the arena runtime's three hot scatters
+    (server receive, ``v_k`` commit, worker apply).  On TPU it routes to the
+    blocked Pallas :func:`scatter_apply` kernel (one HBM pass over the
+    parameter vector, bucketed contiguous DMA for the updates); elsewhere it
+    stays on the XLA scatter — interpret-mode Pallas would serialize the
+    block loop in Python and lose the very dispatch-count war the arena
+    wins.  Duplicate indices accumulate in both paths.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret:
+        return dense.at[indices].add(values.astype(dense.dtype))
+    return scatter_apply(dense, indices, values, interpret=False)
+
+
+def scatter_add_row(dense2d, row, indices, values, *,
+                    interpret: bool | None = None):
+    """``dense2d.at[row, indices].add(values)`` — one worker row of the
+    server's ``v`` buffer.  Off-TPU this is a single 2-D XLA scatter (no
+    row gather/set round trip); on TPU the row is sliced, run through the
+    blocked Pallas kernel, and written back."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret:
+        return dense2d.at[row, indices].add(values.astype(dense2d.dtype))
+    new_row = scatter_apply(dense2d[row], indices, values, interpret=False)
+    return dense2d.at[row].set(new_row)
+
+
 @partial(jax.jit, static_argnames=("cap", "interpret"))
 def scatter_apply(dense, indices, values, *, cap: int | None = None,
                   interpret: bool = True):

@@ -11,6 +11,12 @@ bucketed updates.
 Layout: params viewed as (n_blocks, BLOCK); updates pre-bucketed to
 (n_blocks, CAP) value/offset pairs padded with offset == -1.
 
+This is the TPU fast path behind ``ops.scatter_add`` — the ONE fused
+scatter the flat-arena runtime (core/paramspace.py) runs per event for
+server receive, ``v_k`` commit, and worker apply.  A whole model's sparse
+update is a single global-index COO over the packed arena, so the kernel
+sees one big bucketed scatter instead of one tiny scatter per tensor.
+
 Semantics contract: kernels/ref.py::scatter_accumulate_ref.
 """
 from __future__ import annotations

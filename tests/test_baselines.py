@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import baselines, make_strategy
+from repro.core.paramspace import ParamSpace
 from repro.core.sparsify import SparseLeaf, sparse_to_dense
 
 
@@ -17,59 +18,84 @@ def _params():
     return {"w": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
 
 
+def _space():
+    return ParamSpace.from_tree(_params())
+
+
 def test_asgd_dense_message():
     s = make_strategy("asgd")
     st0 = s.init(_params())
     _, msg = s.step(st0, _grads(), lr=0.1)
-    assert all(not isinstance(m, SparseLeaf) for m in msg)
-    # leaves order is alphabetical: msg[0] == "b"
-    np.testing.assert_allclose(msg[0], 0.1 * _grads()["b"], rtol=1e-6)
+    assert not isinstance(msg, SparseLeaf)
+    space = _space()
+    assert msg.shape == (space.total,)
+    # leaves order is alphabetical: the first view is "b"
+    np.testing.assert_allclose(np.asarray(space.views(msg)[0]),
+                               0.1 * np.asarray(_grads()["b"]).reshape(-1),
+                               rtol=1e-6)
+
+
+def test_message_seg_matches_per_leaf_ks():
+    space = _space()
+    s = make_strategy("dgs", density=0.03)
+    # leaves order alphabetical: b (5,), then w (100,)
+    assert s.message_seg(space) == (max(1, round(0.03 * 5)),
+                                    max(1, round(0.03 * 100)))
+    assert make_strategy("asgd").message_seg(space) is None
 
 
 def test_gd_residual_bookkeeping():
     """GD: residual + message == accumulated lr*grads at every step."""
     s = make_strategy("gd_async", density=0.05)
+    space = _space()
     st = s.init(_params())
-    acc = {k: np.zeros(v.size) for k, v in _params().items()}
+    acc = np.zeros(space.total)
     for t in range(4):
         g = jax.tree.map(lambda x: x * (t + 1), _grads())
         st, msg = s.step(st, g, lr=0.1)
-        for key_i, (k, v) in enumerate(sorted(_params().items())):
-            acc[k] += 0.1 * np.asarray(jax.tree.leaves(g)[key_i]).reshape(-1)
-        sent = [np.asarray(sparse_to_dense(m)) for m in msg]
-        resid = [np.asarray(r) for r in jax.tree.leaves(st.inner)]
-        for i, k in enumerate(sorted(acc)):
-            np.testing.assert_allclose(sent[i] + resid[i], acc[k], rtol=1e-5)
-            acc[k] -= sent[i]
+        acc += 0.1 * np.asarray(space.pack(g))
+        sent = np.asarray(sparse_to_dense(msg))
+        resid = np.asarray(st.inner)
+        assert resid.shape == (space.total,)
+        np.testing.assert_allclose(sent + resid, acc, rtol=1e-5)
+        acc -= sent
 
 
 def test_dgc_momentum_masking():
-    """DGC zeroes velocity AND residual on sent coordinates."""
+    """DGC zeroes velocity AND residual on sent (global) coordinates."""
     s = make_strategy("dgc_async", density=0.05, momentum=0.9)
     st = s.init(_params())
     st, msg = s.step(st, _grads(), lr=0.1)
-    for m, u, r in zip(msg, jax.tree.leaves(st.inner.velocity),
-                       jax.tree.leaves(st.inner.residual)):
-        idx = np.asarray(m.indices)
-        assert np.all(np.asarray(u)[idx] == 0.0)
-        assert np.all(np.asarray(r)[idx] == 0.0)
+    idx = np.asarray(msg.indices)
+    assert np.all(np.asarray(st.inner.velocity)[idx] == 0.0)
+    assert np.all(np.asarray(st.inner.residual)[idx] == 0.0)
 
 
 def test_dgc_clipping():
     s = make_strategy("dgc_async", density=1.0, clip_norm=0.001)
     st = s.init(_params())
     _, msg = s.step(st, _grads(), lr=1.0)
-    total = np.sqrt(sum(float(jnp.sum(m.values ** 2)) for m in msg))
+    total = np.sqrt(float(jnp.sum(msg.values ** 2)))
     assert total <= 0.001 + 1e-6
 
 
 def test_dgs_message_k_sizes():
     s = make_strategy("dgs", density=0.03)
+    space = _space()
     st = s.init(_params())
     _, msg = s.step(st, _grads(), lr=0.1)
-    # leaves order alphabetical: b (5,), then w (100,)
-    assert msg[0].k == max(1, round(0.03 * 5))
-    assert msg[1].k == max(1, round(0.03 * 100))
+    seg = s.message_seg(space)
+    # one global-index message, k == sum of per-tensor ks
+    assert isinstance(msg, SparseLeaf)
+    assert msg.size == space.total
+    assert msg.k == sum(seg)
+    # per-leaf views recover the per-tensor selections
+    parts = space.split(msg, seg)
+    assert [p.k for p in parts] == [max(1, round(0.03 * 5)),
+                                    max(1, round(0.03 * 100))]
+    for p, size in zip(parts, space.sizes):
+        assert np.all(np.asarray(p.indices) >= 0)
+        assert np.all(np.asarray(p.indices) < size)
 
 
 def test_unknown_strategy():

@@ -165,10 +165,10 @@ def test_reset_worker_zeroes_v_row():
     params0 = {"w": jnp.ones((4,))}
     state = ps.init(params0, 2)
     state, _ = ps.add_worker(state)
-    assert state.v[0].shape[0] == 3
-    msg = [jnp.ones((4,), jnp.float32)]
+    assert state.v.shape[0] == 3
+    msg = jnp.ones((4,), jnp.float32)   # dense arena update
     state = ps.receive(state, msg)
     state, _ = ps.send(state, 2)
-    assert float(jnp.abs(state.v[0][2]).sum()) > 0
+    assert float(jnp.abs(state.v[2]).sum()) > 0
     state = ps.reset_worker(state, 2)
-    assert float(jnp.abs(state.v[0][2]).sum()) == 0.0
+    assert float(jnp.abs(state.v[2]).sum()) == 0.0

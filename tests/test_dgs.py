@@ -13,6 +13,20 @@ def _params():
     return {"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))}
 
 
+def _arena_msg(rng, *, k_b=1, k_w=3, b_val=None, b_idx=None):
+    """A global-index arena message over {b: (3,), w: (6,4)} — leaves order
+    alphabetical, so b occupies arena [0, 3) and w [3, 27)."""
+    vb = (np.full(k_b, b_val, np.float32) if b_val is not None
+          else rng.normal(size=k_b).astype(np.float32))
+    ib = (np.asarray(b_idx, np.int32) if b_idx is not None
+          else rng.choice(3, k_b, replace=False).astype(np.int32))
+    vw = rng.normal(size=k_w).astype(np.float32)
+    iw = rng.choice(24, k_w, replace=False).astype(np.int32) + 3
+    return SparseLeaf(values=jnp.asarray(np.concatenate([vb, vw])),
+                      indices=jnp.asarray(np.concatenate([ib, iw])),
+                      size=27)
+
+
 def _problem(seed=0):
     key = jax.random.PRNGKey(seed)
     Wt = jax.random.normal(key, (6, 4))
@@ -39,25 +53,16 @@ class TestServerInvariants:
         params0 = _params()
         state = ps.init(params0, n_workers=2)
         rng = np.random.default_rng(0)
-        # leaves order alphabetical: b (3,), then w (24,)
-        manual = [np.zeros(3), np.zeros(24)]
+        # arena layout (leaves alphabetical): b = [0, 3), w = [3, 27)
+        manual = np.zeros(27)
         for t in range(5):
-            msg = [SparseLeaf(values=jnp.asarray([0.5], jnp.float32),
-                              indices=jnp.asarray([t % 3], jnp.int32),
-                              size=3),
-                   SparseLeaf(values=jnp.asarray(rng.normal(size=3),
-                                                 dtype=jnp.float32),
-                              indices=jnp.asarray(
-                                  rng.choice(24, 3, replace=False),
-                                  dtype=jnp.int32),
-                              size=24)]
+            msg = _arena_msg(rng, b_val=0.5, b_idx=[t % 3])
             state = ps.receive(state, msg)
-            for j, m in enumerate(msg):
-                np.add.at(manual[j], np.asarray(m.indices),
-                          -np.asarray(m.values))
+            np.add.at(manual, np.asarray(msg.indices),
+                      -np.asarray(msg.values))
         model = ps.global_model(params0, state)
-        np.testing.assert_allclose(model["b"], manual[0], rtol=1e-6)
-        np.testing.assert_allclose(model["w"].reshape(-1), manual[1],
+        np.testing.assert_allclose(model["b"], manual[:3], rtol=1e-6)
+        np.testing.assert_allclose(model["w"].reshape(-1), manual[3:],
                                    rtol=1e-6)
 
     def test_v_equals_M_after_send(self):
@@ -66,16 +71,10 @@ class TestServerInvariants:
         state = ps.init(params0, n_workers=3)
         rng = np.random.default_rng(1)
         for t in range(4):
-            msg = [SparseLeaf(jnp.asarray(rng.normal(size=2), jnp.float32),
-                              jnp.asarray(rng.choice(24, 2, replace=False),
-                                          jnp.int32), 24),
-                   SparseLeaf(jnp.asarray([1.0], jnp.float32),
-                              jnp.asarray([0], jnp.int32), 3)]
-            state = ps.receive(state, msg)
+            state = ps.receive(state, _arena_msg(rng, k_b=1, k_w=2))
             state, G = ps.send(state, worker_id=t % 3)
             wid = t % 3
-            for M_leaf, v_leaf in zip(state.M, state.v):
-                np.testing.assert_allclose(v_leaf[wid], M_leaf, rtol=1e-6)
+            np.testing.assert_allclose(state.v[wid], state.M, rtol=1e-6)
 
     def test_secondary_compression_conserves_mass(self):
         """Eq. 6: with secondary compression, (M - v_k) holds exactly the
@@ -84,17 +83,11 @@ class TestServerInvariants:
         state = ps.init(params0, n_workers=1)
         rng = np.random.default_rng(2)
         for t in range(6):
-            msg = [SparseLeaf(jnp.asarray(rng.normal(size=4), jnp.float32),
-                              jnp.asarray(rng.choice(24, 4, replace=False),
-                                          jnp.int32), 24),
-                   SparseLeaf(jnp.asarray([0.3], jnp.float32),
-                              jnp.asarray([1], jnp.int32), 3)]
-            state = ps.receive(state, msg)
+            state = ps.receive(state, _arena_msg(rng, k_b=1, k_w=4))
             state, G = ps.send(state, 0, secondary_density=0.1)
         # residual = M - v is whatever wasn't shipped; a dense send clears it
         state2, G_full = ps.send(state, 0, secondary_density=None)
-        for M_leaf, v_leaf in zip(state2.M, state2.v):
-            np.testing.assert_allclose(v_leaf[0], M_leaf, rtol=1e-6)
+        np.testing.assert_allclose(state2.v[0], state2.M, rtol=1e-6)
 
 
 class TestEquivalence:

@@ -267,8 +267,8 @@ class TestUniformQuantization:
         for name in ("gd_async", "dgc_async", "dgs_plain"):
             s = make_strategy(name, density=0.25, quantize="int8")
             assert s.value_bits == 8
-            st_, msgs = s.step(s.init(params), grads, lr=0.1)
-            assert len(msgs) == 1
+            st_, msg = s.step(s.init(params), grads, lr=0.1)
+            assert isinstance(msg, SparseLeaf) and msg.k == 8
 
     def test_tern_scale_ignores_padding_zeros(self):
         """The shared tern magnitude is computed over nonzero entries only:
@@ -308,15 +308,15 @@ class TestServerSecondaryCompression:
         params0 = {"w": jnp.zeros((64,))}
         state = ps.init(params0, n_workers=1)
         rng = np.random.default_rng(3)
-        msg = [SparseLeaf(jnp.asarray(rng.normal(size=8), jnp.float32),
-                          jnp.asarray(rng.choice(64, 8, replace=False),
-                                      jnp.int32), 64)]
+        msg = SparseLeaf(jnp.asarray(rng.normal(size=8), jnp.float32),
+                         jnp.asarray(rng.choice(64, 8, replace=False),
+                                     jnp.int32), 64)
         state = ps.receive(state, msg)
-        diff = np.asarray(state.M[0] - state.v[0][0])
+        diff = np.asarray(state.M - state.v[0])
         _, G = ps.send(state, 0, secondary_density=0.1,
                        spec=CompressionSpec(engine="sampled",
                                             sample_size=16))
-        leaf = G[0]
+        leaf = G
         assert leaf.k == 6  # density_to_k(64, 0.1)
         thr = float(sampled_threshold(jnp.asarray(diff), 0.1,
                                       sample_size=16))
@@ -332,11 +332,17 @@ class TestServerSecondaryCompression:
 class TestStrategiesAcrossEngines:
     @pytest.mark.parametrize("engine", ["exact", "sampled", "blockwise"])
     def test_dgs_step_runs_and_ships_k(self, engine):
+        from repro.core.paramspace import ParamSpace
+
         params = {"w": jnp.zeros((300,)), "b": jnp.zeros((40,))}
         grads = jax.tree.map(
             lambda p: jax.random.normal(jax.random.PRNGKey(9), p.shape),
             params)
         s = make_strategy("dgs", density=0.1, engine=engine)
-        st_, msgs = s.step(s.init(params), grads, lr=0.1)
-        ks = sorted(m.k for m in msgs)
-        assert ks == [4, 30]
+        st_, msg = s.step(s.init(params), grads, lr=0.1)
+        space = ParamSpace.from_tree(params)
+        seg = s.message_seg(space)
+        assert sorted(seg) == [4, 30]
+        assert msg.k == 34 and msg.size == space.total
+        parts = space.split(msg, seg)
+        assert sorted(p.k for p in parts) == [4, 30]

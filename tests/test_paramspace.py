@@ -1,0 +1,191 @@
+"""Flat parameter arena (DESIGN.md §8): pack/unpack round-trips, and the
+global-COO select/receive/commit/apply pipeline is bit-equal to the
+pre-arena per-leaf path across every engine and quantize mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.core import engine as E
+from repro.core import server as ps
+from repro.core.engine import CompressionSpec
+from repro.core.paramspace import ParamSpace
+from repro.core.sparsify import SparseLeaf, density_to_k
+
+MODES = ("none", "bf16", "int8", "tern")
+
+
+def _random_tree(seed: int, n_leaves: int):
+    """A pytree with varied ranks/shapes (dict ordering = leaves order)."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i in range(n_leaves):
+        rank = int(rng.integers(0, 4))
+        shape = tuple(int(rng.integers(1, 7)) for _ in range(rank))
+        tree[f"p{i:02d}"] = jnp.asarray(
+            rng.normal(size=shape), jnp.float32)
+    return tree
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2 ** 31))
+def test_property_pack_unpack_roundtrip(n_leaves, seed):
+    """unpack(pack(tree)) is the identity (bitwise) on arbitrary pytrees,
+    and the layout invariants hold (offsets = running sum, views = leaves)."""
+    tree = _random_tree(seed, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    flat = space.pack(tree)
+    assert flat.shape == (space.total,)
+    assert space.total == sum(space.sizes)
+    assert space.offsets == tuple(
+        int(o) for o in np.cumsum((0,) + space.sizes[:-1]))
+    out = space.unpack(flat)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # views are exactly the flattened leaves
+    for v, leaf in zip(space.views(flat), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(leaf).reshape(-1))
+
+
+def test_pack_roundtrip_preserves_dtype_and_scalar_leaves():
+    tree = {"s": jnp.float32(3.5), "w": jnp.ones((2, 3), jnp.bfloat16)}
+    space = ParamSpace.from_tree(tree)
+    out = space.unpack(space.pack(tree))
+    assert jnp.asarray(out["s"]).dtype == jnp.float32
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+    assert float(out["s"]) == 3.5
+
+
+def _perleaf_select(space, x, ks, spec):
+    """The pre-arena per-leaf selection path, verbatim: engine select per
+    flattened leaf (quantization per leaf)."""
+    return [E.select(v, k, spec) for v, k in zip(space.views(x), ks)]
+
+
+@pytest.mark.parametrize("engine_name,extra", [
+    ("exact", {}),
+    ("sampled", {"sample_size": 32}),
+    ("blockwise", {}),
+])
+@pytest.mark.parametrize("mode", MODES)
+def test_arena_select_bitequal_to_perleaf(engine_name, extra, mode,
+                                          density=0.2):
+    """ParamSpace.select == concat(per-leaf engine select), indices rebased
+    by leaf offset — for every engine and quantize mode, bit-for-bit."""
+    tree = _random_tree(7, 4)
+    space = ParamSpace.from_tree(tree)
+    x = space.pack(jax.tree.map(
+        lambda l: jax.random.normal(jax.random.PRNGKey(l.size), l.shape),
+        tree))
+    spec = CompressionSpec(engine=engine_name, quantize=mode, **extra)
+    ks = space.ks(density)
+    arena = space.select(x, ks, spec)
+    per = _perleaf_select(space, x, ks, spec)
+    np.testing.assert_array_equal(
+        np.asarray(arena.values),
+        np.concatenate([np.asarray(m.values) for m in per]))
+    np.testing.assert_array_equal(
+        np.asarray(arena.indices),
+        np.concatenate([np.asarray(m.indices) + off
+                        for m, off in zip(per, space.offsets)]))
+    assert arena.size == space.total
+    # split() is the inverse view
+    for back, m in zip(space.split(arena, ks), per):
+        np.testing.assert_array_equal(np.asarray(back.values),
+                                      np.asarray(m.values))
+        np.testing.assert_array_equal(np.asarray(back.indices),
+                                      np.asarray(m.indices))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(5, 60), st.integers(0, 2 ** 31))
+def test_property_receive_commit_apply_bitequal_perleaf(n_leaves, steps,
+                                                        seed):
+    """The fused single-scatter server ops (receive / send_commit /
+    apply_update) reproduce the per-leaf scatter path bit-for-bit over an
+    arbitrary message stream."""
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(seed % 1000, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    total = space.total
+    state = ps.init(tree, n_workers=2)
+    theta = space.pack(tree)
+    # per-leaf references as plain numpy
+    M_ref = np.zeros(total, np.float32)
+    v_ref = np.zeros((2, total), np.float32)
+    theta_ref = np.asarray(theta).copy()
+    for t in range(steps % 7 + 2):
+        # random global-COO message built from per-leaf selections
+        vals, idxs = [], []
+        for off, size in zip(space.offsets, space.sizes):
+            k = int(rng.integers(1, size + 1))
+            idx = rng.choice(size, k, replace=False).astype(np.int32)
+            val = rng.normal(size=k).astype(np.float32)
+            vals.append(val)
+            idxs.append(idx + off)
+        msg = SparseLeaf(values=jnp.asarray(np.concatenate(vals)),
+                         indices=jnp.asarray(np.concatenate(idxs)),
+                         size=total)
+        wid = t % 2
+        state = ps.receive(state, msg)
+        G = ps.send_select(state, wid, secondary_density=0.3)
+        state = ps.send_commit(state, wid, G)
+        theta = ps.apply_update(theta, msg)
+        # per-leaf reference: one scatter per leaf (the pre-arena path)
+        for off, size, val, gidx in zip(space.offsets, space.sizes, vals,
+                                        idxs):
+            lidx = gidx - off
+            np.subtract.at(M_ref[off:off + size], lidx, val)
+            np.add.at(theta_ref[off:off + size], lidx, val)
+        diff = M_ref - v_ref[wid]
+        for off, size in zip(space.offsets, space.sizes):
+            kk = density_to_k(size, 0.3)
+            leaf = E.select(jnp.asarray(diff[off:off + size]), kk,
+                            CompressionSpec(engine="exact"))
+            np.add.at(v_ref[wid], np.asarray(leaf.indices) + off,
+                      np.asarray(leaf.values))
+    np.testing.assert_array_equal(np.asarray(state.M), M_ref)
+    np.testing.assert_array_equal(np.asarray(state.v), v_ref)
+    np.testing.assert_array_equal(np.asarray(theta), theta_ref)
+
+
+def test_dense_commit_snaps_v_to_M():
+    """A dense downward message must set v_k = M exactly (no cancellation
+    through v + (M - v))."""
+    tree = _random_tree(3, 3)
+    space = ParamSpace.from_tree(tree)
+    state = ps.init(tree, n_workers=1)
+    msg = SparseLeaf(
+        values=jnp.asarray(np.random.default_rng(0).normal(
+            size=5).astype(np.float32)),
+        indices=jnp.asarray(np.arange(5, dtype=np.int32)),
+        size=space.total)
+    state = ps.receive(state, msg)
+    G = ps.send_select(state, 0, secondary_density=None)
+    assert not isinstance(G, SparseLeaf)
+    state = ps.send_commit(state, 0, G)
+    np.testing.assert_array_equal(np.asarray(state.v[0]),
+                                  np.asarray(state.M))
+
+
+def test_space_is_static_and_hashable():
+    """ParamSpace rides inside jitted ServerState as a static pytree node:
+    equal trees give equal (hashable) descriptors and zero jit leaves."""
+    a = ParamSpace.from_tree({"w": jnp.zeros((3, 2)), "b": jnp.zeros((4,))})
+    b = ParamSpace.from_tree({"w": jnp.ones((3, 2)), "b": jnp.ones((4,))})
+    assert a == b and hash(a) == hash(b)
+    leaves, treedef = jax.tree.flatten(a)
+    assert leaves == []  # static: no traced children
+
+    @jax.jit
+    def f(state):
+        return state.space.total + jnp.sum(state.M)
+
+    state = ps.init({"w": jnp.zeros((3, 2)), "b": jnp.zeros((4,))}, 1)
+    assert int(f(state)) == 10

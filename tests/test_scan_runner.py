@@ -1,10 +1,13 @@
-"""The jitted scan runner must match the python event loop exactly."""
+"""The jitted scan runner must match the python event loop EXACTLY:
+losses, final params, and up/down byte totals, bit for bit."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import async_sim, make_strategy
+from repro.core.engine import CompressionSpec
+from repro.core.paramspace import ParamSpace
 from repro.core.scan_runner import run_async_scan
 
 
@@ -29,30 +32,62 @@ def _problem():
     return grad_fn, batch
 
 
+def _run_both(name, kw, *, sd=None, spec=CompressionSpec(engine="exact"),
+              n_events=40, n_workers=3):
+    grad_fn, batch_fn = _problem()
+    params0 = {"w": jnp.zeros((6, 4)), "b": jnp.zeros((4,))}
+    sched = async_sim.make_schedule(n_workers, n_events, seed=7, hetero=0.9)
+    strategy = make_strategy(name, **kw)
+    tr = async_sim.AsyncTrainer(strategy, grad_fn, n_workers, lr=0.03,
+                                secondary_density=sd, secondary_spec=spec)
+    f_py, _, h_py = tr.run(params0, sched,
+                           lambda e, k: batch_fn(e, int(k)))
+    batches = [batch_fn(e, int(sched[e])) for e in range(n_events)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    f_scan, h_scan = run_async_scan(strategy, grad_fn, params0, sched,
+                                    stacked, n_workers=n_workers, lr=0.03,
+                                    secondary_density=sd,
+                                    secondary_spec=spec)
+    return f_py, h_py, f_scan, h_scan
+
+
 @pytest.mark.parametrize("name,kw", [
     ("asgd", {}),
     ("dgs", {"density": 0.2, "momentum": 0.7}),
     ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}),
     ("gd_async", {"density": 0.2}),
 ])
-def test_scan_matches_python_loop(name, kw):
-    grad_fn, batch_fn = _problem()
-    params0 = {"w": jnp.zeros((6, 4)), "b": jnp.zeros((4,))}
-    n_events, n_workers = 40, 3
-    sched = async_sim.make_schedule(n_workers, n_events, seed=7, hetero=0.9)
-    strategy = make_strategy(name, **kw)
-    # python loop
-    tr = async_sim.AsyncTrainer(strategy, grad_fn, n_workers, lr=0.03)
-    f_py, _, hist = tr.run(params0, sched,
-                           lambda e, k: batch_fn(e, int(k)))
-    # jitted scan (same batches, stacked)
-    batches = [batch_fn(e, int(sched[e])) for e in range(n_events)]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-    f_scan, losses = run_async_scan(strategy, grad_fn, params0, sched,
-                                    stacked, n_workers=n_workers, lr=0.03)
+def test_scan_matches_python_loop_bitforbit(name, kw):
+    f_py, h_py, f_scan, h_scan = _run_both(name, kw)
     for a, b in zip(jax.tree.leaves(f_py), jax.tree.leaves(f_scan)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
-    np.testing.assert_allclose(hist.losses, np.asarray(losses), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(h_py.losses, np.asarray(h_scan.losses))
+    np.testing.assert_array_equal(h_py.staleness, h_scan.staleness)
+    assert h_py.up_bytes == h_scan.up_bytes
+    assert h_py.down_bytes == h_scan.down_bytes
+
+
+@pytest.mark.parametrize("name,kw,sd,spec", [
+    # dense down: data-dependent DENSE/DENSE_COO framing per event
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}, None,
+     CompressionSpec(engine="exact")),
+    # secondary compression + int8 wire both ways: static arena frames
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}, 0.1,
+     CompressionSpec(engine="exact", quantize="int8")),
+    # tern up, bf16 secondary
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "tern"}, 0.1,
+     CompressionSpec(engine="exact", quantize="bf16")),
+    # dense up (ASGD): data-dependent up framing
+    ("asgd", {}, 0.1, CompressionSpec(engine="exact")),
+])
+def test_scan_byte_parity(name, kw, sd, spec):
+    """up_bytes/down_bytes must agree with the python loop exactly — the
+    scan's static (and vectorized-dense) accounting IS the codec's
+    measured frame size."""
+    _, h_py, _, h_scan = _run_both(name, kw, sd=sd, spec=spec)
+    assert h_py.up_bytes == h_scan.up_bytes
+    assert h_py.down_bytes == h_scan.down_bytes
+    assert h_scan.up_bytes > 0 and h_scan.down_bytes > 0
 
 
 def test_quantized_dgs_converges_and_saves_bytes():
@@ -70,13 +105,14 @@ def test_quantized_dgs_converges_and_saves_bytes():
     # both converge
     for q, h in results.items():
         assert h.losses[-10:].mean() < h.losses[:10].mean(), q
-    # byte accounting IS the wire codec's serialized frame size: check it
-    # exactly against the codec's per-leaf formula for this fixed shape
+    # byte accounting IS the wire codec's serialized ARENA frame size:
+    # check it exactly against the codec's formula for this fixed shape
     from repro.cluster import wire
+    space = ParamSpace.from_tree(params0)
+    seg = space.ks(0.2)   # (1, 5): density 0.2 of b (4,) and w (6,4)
+    assert seg == (1, 5)
     n_events = 250
-    ks = {"w": (5, 24), "b": (1, 4)}  # density 0.2 of (6,4) and (4,)
     for q, h in results.items():
-        per_event = 17 + sum(wire.leaf_frame_bytes(k, n, q)
-                             for k, n in ks.values())
+        per_event = wire.frame_bytes_static(seg, space.total, q)
         assert h.up_bytes == n_events * per_event, q
     assert results["tern"].up_bytes < results["none"].up_bytes
