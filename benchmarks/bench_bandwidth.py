@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import csv_row, make_classification_problem, run_strategy
+from .common import (csv_row, make_classification_problem, record_perf,
+                     run_strategy)
 
 GBPS = 1e9 / 8  # bytes per second per Gbps
 
@@ -35,16 +36,30 @@ def run(quick: bool = False):
             secondary_density=secondary, seed=4)
         per_iter = (hist.up_bytes + hist.down_bytes) / n_events
         measured[tag] = per_iter
+        record_perf("bandwidth", f"bytes/{tag}",
+                    config={"strategy": name, "density": 0.01,
+                            "secondary_density": secondary,
+                            "n_workers": 8, "n_events": n_events},
+                    events_per_sec=n_events / dt,
+                    nbytes=hist.up_bytes + hist.down_bytes,
+                    wall_clock_s=dt)
         rows.append(csv_row(f"fig4/bytes/{tag}", dt / n_events * 1e6,
                             f"bytes_per_iter={per_iter:.0f}"))
     # measured-wire rows: per-iteration serialized frame bytes of the
     # cluster codec (headers, scales, bit-packed values) per quantize mode
     # — what a real TCP run of launch/cluster.py moves per event
     for mode in ("bf16", "int8", "tern"):
-        _, hist, _ = run_strategy(
+        _, hist, dt = run_strategy(
             "dgs", params0, grad_fn, batch_fn, n_workers=8,
             n_events=n_events, lr=0.08, density=0.01, momentum=0.7,
             secondary_density=0.01, seed=4, quantize=mode)
+        record_perf("bandwidth", f"wire/dgs+2nd/{mode}",
+                    config={"strategy": "dgs", "density": 0.01,
+                            "secondary_density": 0.01, "quantize": mode,
+                            "n_workers": 8, "n_events": n_events},
+                    events_per_sec=n_events / dt,
+                    nbytes=hist.up_bytes + hist.down_bytes,
+                    wall_clock_s=dt)
         rows.append(csv_row(
             f"fig4/wire/dgs+2nd/{mode}", 0.0,
             f"up_per_iter={hist.up_bytes / n_events:.0f};"

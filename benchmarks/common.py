@@ -9,6 +9,9 @@ task.  Strategy implementations are the real ones from repro.core.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import subprocess
 import time
 
 import jax
@@ -17,6 +20,57 @@ import numpy as np
 
 from repro.core import async_sim, make_strategy
 from repro.data.synthetic import ClassificationTask, SequenceCopyTask
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------------- perf artifacts
+
+# bench name -> list of measurement records; benches append via
+# record_perf and run.py / --smoke entries flush to BENCH_<name>.json
+_PERF: dict[str, list[dict]] = {}
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=REPO_ROOT, text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def record_perf(bench: str, name: str, *, config: dict,
+                events_per_sec: float, nbytes: int,
+                wall_clock_s: float) -> None:
+    """Book one measurement for the ``BENCH_<bench>.json`` artifact.
+
+    ``config`` is the measurement's full parameterization (model size,
+    workers, events, strategy...) so a row is reproducible from the
+    artifact alone.
+    """
+    _PERF.setdefault(bench, []).append({
+        "name": name,
+        "config": config,
+        "events_per_sec": round(float(events_per_sec), 3),
+        "bytes": int(nbytes),
+        "wall_clock_s": round(float(wall_clock_s), 6),
+    })
+
+
+def write_bench_artifacts(root: pathlib.Path | None = None) -> list[str]:
+    """Flush every recorded bench to ``BENCH_<name>.json`` at the repo
+    root (commit + measurement rows); returns the paths written."""
+    root = pathlib.Path(root) if root is not None else REPO_ROOT
+    commit = git_commit()
+    written = []
+    for bench, rows in sorted(_PERF.items()):
+        path = root / f"BENCH_{bench}.json"
+        path.write_text(json.dumps(
+            {"commit": commit, "bench": bench, "rows": rows}, indent=2)
+            + "\n")
+        written.append(str(path))
+    return written
 
 
 # --------------------------------------------------------------- MLP model

@@ -43,6 +43,9 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             traceback.print_exc()
+    from .common import write_bench_artifacts
+    for path in write_bench_artifacts():
+        print(f"# wrote {path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmarks failed: {[n for n, _ in failed]}")
 

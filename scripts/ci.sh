@@ -13,7 +13,10 @@ else
   echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
 fi
 python -m pytest -q -x "$@"
-# fused arena event loop + lax.scan runner: must beat per-leaf / stay
-# byte-parity-exact (asserts inside --smoke)
+# fused arena event loop + lax.scan runner + batched event loop: must
+# beat per-leaf / stay byte-parity-exact / beat serial by >= 1.2x
+# (asserts inside --smoke, which also writes BENCH_scalability.json)
 timeout 600 python -m benchmarks.bench_scalability --smoke
+test -s BENCH_scalability.json || {
+  echo "FAIL: BENCH_scalability.json not written"; exit 1; }
 timeout 300 python -m repro.launch.cluster --smoke

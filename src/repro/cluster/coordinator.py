@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -56,12 +57,18 @@ class Coordinator:
     scheduler: Any = None              # ScheduleDriven | VirtualClock | None
     virtual_costs: dict | None = None  # client -> FaultPolicy (virtual time)
     recv_timeout: float | None = None
+    # upper bound on how many scheduler turns drain as ONE batched server
+    # dispatch (None = unbounded, 1 = serve serially).  Only schedulers
+    # exposing ``next_batch`` (ScheduleDriven) batch; the batched stages
+    # are bit-equal to the serial ones, so this is purely a perf knob.
+    max_batch: int | None = None
 
     def __post_init__(self):
         self.sstate = ps.init(self.params0, self.n_slots)
-        self._server_step = async_sim.make_server_step(
+        self._batched_server = async_sim.make_batched_server_step(
             self.secondary_density, self.secondary_spec)
-        self._commit = async_sim.make_commit()
+        self._commit_rows = async_sim.make_batched_commit(
+            self.secondary_density is None)
         self._down_mode = self.secondary_spec.quantize
         # arena frame segmentation of the sparse downward message (None =
         # dense downward, framed DENSE/DENSE_COO)
@@ -110,64 +117,97 @@ class Coordinator:
 
     # -- one message -------------------------------------------------------
 
-    def _handle(self, src: int, payload: bytes) -> str:
+    def _classify(self, src: int, payload: bytes):
+        """Decode + dispatch control traffic; returns ``(kind, msg)``.
+
+        UP frames are only *validated* here — the gradient math runs in
+        :meth:`_process_ups`, which takes a whole batch of them at once.
+        """
         try:
             msg = wire.decode_message(payload)
         except Exception:
             if self.scheduler is not None:
                 raise   # trusted in-process peers: corruption is a bug
-            return "ignored"   # TCP: drop the malformed frame, keep serving
+            return "ignored", None  # TCP: drop the bad frame, keep serving
         if msg.type == wire.HELLO:
             slot = self._attach(src, msg.seq)
             reply, _ = wire.encode_message(
                 wire.WELCOME, wire.COORDINATOR_ID, slot)
             self.transport.send(src, reply)
-            return "hello"
+            return "hello", msg
         if msg.type == wire.SKIP:
             self._account(src, 0)
-            return "skip"
+            return "skip", msg
         if msg.type == wire.BYE:
             self._detach(src)
-            return "bye"
+            return "bye", msg
         if msg.type != wire.UP:
             raise ValueError(f"unexpected {wire.TYPE_NAMES[msg.type]}")
         if len(msg.leaves) != 1:
             # the arena protocol ships exactly ONE frame per UP message
-            return "ignored"
+            return "ignored", None
         if src not in self._slot_of:
             # UP without a completed HELLO (restarted or foreign peer):
             # reject the frame, not the whole run
-            return "ignored"
-
+            return "ignored", None
         if msg.seq <= self._last_seq.get(src, -1):
             # duplicate after a dropped reply: answer from cache, do NOT
             # re-apply the gradient (at-least-once -> exactly-once)
             cached = self._reply_cache.get(src)
             if cached is not None:
                 self.transport.send(src, cached)
-            return "dup"
+            return "dup", None
+        return "up", msg
 
-        slot = self._slot_of[src]
-        self.up_bytes += len(payload)
-        e = len(self._losses)
-        self._losses.append(float(np.float32(msg.aux)))
-        self._served_slots.append(slot)
-        self._staleness.append(e - self._last_sync.get(slot, 0))
-        self._last_sync[slot] = e + 1
+    def _process_ups(self, ups):
+        """Apply a batch of UP messages as ONE pass over the server stages.
 
-        self.sstate, G_raw = self._server_step(
-            self.sstate, msg.leaves[0], jnp.int32(slot))
-        reply, shipped = wire.encode_message(
-            wire.DOWN, wire.COORDINATOR_ID, msg.seq, [G_raw],
-            mode=self._down_mode, seg=self._down_seg)
-        self.sstate = self._commit(self.sstate, jnp.int32(slot),
-                                   shipped[0])
-        self.down_bytes += len(reply)
-        self._last_seq[src] = msg.seq
-        self._reply_cache[src] = reply
-        self.transport.send(src, reply)
-        self._account(src, len(payload) + len(reply))
-        return "up"
+        ``ups`` is ``[(src, payload, msg), ...]`` with pairwise-distinct
+        sources (the batching rule): the messages stack on a leading batch
+        axis, the receives run as one scan, the select each raw downward
+        message against its prefix M, and the commits fuse into one
+        multi-row scatter — bit-equal to serving the UPs one at a time
+        (``async_sim.run_batched``'s contract).  Replies are sent AFTER
+        the batch commits, in schedule order.
+        """
+        slots = [self._slot_of[src] for src, _, _ in ups]
+        for (src, payload, msg), slot in zip(ups, slots):
+            self.up_bytes += len(payload)
+            e = len(self._losses)
+            self._losses.append(float(np.float32(msg.aux)))
+            self._served_slots.append(slot)
+            self._staleness.append(e - self._last_sync.get(slot, 0))
+            self._last_sync[slot] = e + 1
+
+        ids = jnp.asarray(slots, jnp.int32)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[m.leaves[0] for _, _, m in ups])
+        self.sstate, G_stack, M_rows = self._batched_server(
+            self.sstate, stacked, ids)
+
+        replies, shipped = [], []
+        for i, (src, payload, msg) in enumerate(ups):
+            G_i = jax.tree.map(lambda x: x[i], G_stack)
+            reply, ship = wire.encode_message(
+                wire.DOWN, wire.COORDINATOR_ID, msg.seq, [G_i],
+                mode=self._down_mode, seg=self._down_seg)
+            replies.append(reply)
+            shipped.append(ship[0])
+
+        if self._down_seg is not None:
+            G_ship = jax.tree.map(lambda *xs: jnp.stack(xs), *shipped)
+            self.sstate = self._commit_rows(self.sstate, ids, G_ship)
+        else:
+            # dense downward: v rows snap to the per-event prefix M
+            self.sstate, _ = self._commit_rows(
+                self.sstate, ids, G_stack, M_rows)
+
+        for (src, payload, msg), reply in zip(ups, replies):
+            self.down_bytes += len(reply)
+            self._last_seq[src] = msg.seq
+            self._reply_cache[src] = reply
+            self.transport.send(src, reply)
+            self._account(src, len(payload) + len(reply))
 
     def _account(self, client: int, nbytes: int):
         if self.scheduler is None:
@@ -179,37 +219,71 @@ class Coordinator:
 
     # -- the loop ----------------------------------------------------------
 
+    def _next_turns(self, remaining: int | None) -> list[int]:
+        """The scheduler's next run of turns to drain as one batch.
+
+        ``ScheduleDriven.next_batch`` yields the maximal
+        pairwise-distinct-client run (pow2-truncated); schedulers without
+        it (VirtualClock — its choice depends on costs booked per event)
+        serve one client at a time, as does ``max_batch=1``.
+        """
+        next_batch = getattr(self.scheduler, "next_batch", None)
+        if next_batch is None or self.max_batch == 1:
+            who = self.scheduler.next_client()
+            return [] if who is None else [who]
+        cap = self.max_batch
+        if remaining is not None:
+            cap = remaining if cap is None else min(cap, remaining)
+        return next_batch(cap)
+
+    def _collect_turn(self, who):
+        """One scheduler turn: absorb control traffic from ``who``'s lane
+        until it yields an UP (returned unprocessed) or ends (skip/bye)."""
+        while True:
+            src, payload = self.transport.recv(who, timeout=self.recv_timeout)
+            kind, msg = self._classify(src, payload)
+            if kind == "up":
+                return src, payload, msg
+            if kind in ("skip", "bye"):
+                return None
+            # hello/dup/ignored: keep this turn open
+
     def serve(self, max_events: int | None = None):
         """Run until the schedule is exhausted / every client left.
 
         With a scheduler, each turn serves the scheduler's chosen client
-        (selective receive — arrival order cannot change the served order).
-        Without one (real-time TCP mode) messages are served as they come.
+        (selective receive — arrival order cannot change the served
+        order), and consecutive turns for pairwise-distinct clients drain
+        through the batched server stages as ONE dispatch (bit-equal to
+        serial — ``max_batch`` caps or disables this).  Without a
+        scheduler (real-time TCP mode) messages are served as they come.
         """
         events = 0
         while max_events is None or events < max_events:
-            who = None
             if self.scheduler is not None:
-                who = self.scheduler.next_client()
-                if who is None:
+                remaining = None if max_events is None else max_events - events
+                turns = self._next_turns(remaining)
+                if not turns:
                     break
-            # a turn absorbs control traffic until it yields at most one UP
-            while True:
-                try:
-                    src, payload = self.transport.recv(
-                        who, timeout=self.recv_timeout)
-                except RecvTimeout:
-                    if self.scheduler is None and self._all_done():
-                        return self._finish()
-                    raise
-                kind = self._handle(src, payload)
-                if kind == "up":
-                    events += 1
-                    break
-                if kind in ("skip", "bye"):
-                    break
-                # hello/dup: keep this turn open
-            if self.scheduler is None and self._all_done():
+                ups = [up for who in turns
+                       if (up := self._collect_turn(who)) is not None]
+                if ups:
+                    self._process_ups(ups)
+                    events += len(ups)
+                continue
+            # real-time path: one message at a time, arrival order
+            try:
+                src, payload = self.transport.recv(
+                    None, timeout=self.recv_timeout)
+            except RecvTimeout:
+                if self._all_done():
+                    return self._finish()
+                raise
+            kind, msg = self._classify(src, payload)
+            if kind == "up":
+                self._process_ups([(src, payload, msg)])
+                events += 1
+            if self._all_done():
                 break
         return self._finish()
 

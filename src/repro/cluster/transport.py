@@ -229,6 +229,25 @@ class ScheduleDriven:
         self._i += 1
         return k
 
+    def next_batch(self, max_batch: int | None = None) -> list[int]:
+        """The next maximal run of PAIRWISE-DISTINCT clients, truncated to
+        a power of two — ``async_sim.batch_schedule``'s rule, so a batched
+        coordinator serves the exact event order the simulator batches.
+        Advances the cursor by the kept length; empty when exhausted."""
+        n = len(self.order)
+        if self._i >= n:
+            return []
+        limit = n if max_batch is None else min(n, self._i + int(max_batch))
+        seen: set[int] = set()
+        j = self._i
+        while j < limit and self.order[j] not in seen:
+            seen.add(self.order[j])
+            j += 1
+        size = 1 << ((j - self._i).bit_length() - 1)
+        batch = self.order[self._i:self._i + size]
+        self._i += size
+        return batch
+
     def account(self, client: int, cost: float):
         pass
 

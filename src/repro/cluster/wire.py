@@ -254,14 +254,13 @@ def _pack_values(codes, mode: str) -> bytes:
     return _pack_tern(np.asarray(codes))  # tern
 
 
-def encode_arena_leaf(leaf: SparseLeaf, mode: str, seg):
-    """Serialize one global-index arena message as an ARENA frame.
+def encode_arena_leaf_segments(leaf: SparseLeaf, mode: str, seg):
+    """Reference ARENA encoder: the original python-side segment loop.
 
-    ``seg`` is the static per-tensor entry count tuple (sum == leaf.k).
-    Each segment's values quantize with their OWN scale through the same
-    jitted quantizer as ``quantize_message`` — so ``shipped`` (what the
-    decoder reconstructs) is bit-equal to the in-process stand-in.
-    Returns ``(frame_bytes, shipped_leaf)``.
+    One jitted ``quantize_parts`` dispatch plus two host transfers PER
+    SEGMENT — kept as the semantics oracle :func:`pack_from_arena` is
+    tested bit-equal against (tests/test_wire.py), and as the simplest
+    statement of the frame layout.  Returns ``(frame_bytes, shipped)``.
     """
     seg = tuple(int(s) for s in seg)
     k, size = int(leaf.k), int(leaf.size)
@@ -286,6 +285,49 @@ def encode_arena_leaf(leaf: SparseLeaf, mode: str, seg):
         values=dq[0] if len(dq) == 1 else jnp.concatenate(dq),
         indices=leaf.indices, size=size)
     return _LEN.pack(len(body)) + body, shipped
+
+
+def pack_from_arena(leaf: SparseLeaf, mode: str, seg):
+    """Fused zero-copy ARENA encode (kernels/wire_pack.py).
+
+    ONE jitted program quantizes every segment with its own scale and
+    emits the bit-packed wire value block, the per-tensor scale vector,
+    and the dequantized shipped values; a second tiny program narrows the
+    indices on device.  The leaf's values/indices can be views straight
+    off the flat parameter arena (nothing copies before the program
+    runs), and exactly three buffers cross to the host per message —
+    codes, scales, indices — instead of two per segment.  Bit-equal to
+    :func:`encode_arena_leaf_segments`, byte for byte.  On TPU the value
+    packing runs as Pallas kernels; elsewhere as the identical XLA ops.
+    Returns ``(frame_bytes, shipped_leaf)``.
+    """
+    from repro.kernels import wire_pack
+    seg = tuple(int(s) for s in seg)
+    k, size = int(leaf.k), int(leaf.size)
+    assert sum(seg) == k, (seg, k)
+    codes, scales, dq = wire_pack.quantize_pack(
+        leaf.values, mode=mode, seg=seg)
+    idx = wire_pack.narrow_indices(leaf.indices, size=size)
+    body = _HEADER.pack(len(seg), MODES[mode], ARENA, k, size)
+    body += np.asarray(seg, np.uint32).tobytes()
+    if mode in ("int8", "tern"):
+        body += np.asarray(scales).tobytes()
+    body += np.asarray(idx).tobytes() + np.asarray(codes).tobytes()
+    shipped = SparseLeaf(values=dq, indices=leaf.indices, size=size)
+    return _LEN.pack(len(body)) + body, shipped
+
+
+def encode_arena_leaf(leaf: SparseLeaf, mode: str, seg):
+    """Serialize one global-index arena message as an ARENA frame.
+
+    ``seg`` is the static per-tensor entry count tuple (sum == leaf.k).
+    Each segment's values quantize with their OWN scale through the same
+    quantization arithmetic as ``quantize_message`` — so ``shipped``
+    (what the decoder reconstructs) is bit-equal to the in-process
+    stand-in.  Routed through the fused :func:`pack_from_arena` path.
+    Returns ``(frame_bytes, shipped_leaf)``.
+    """
+    return pack_from_arena(leaf, mode, seg)
 
 
 def encode_leaf(leaf_id: int, leaf, mode: str = "none", seg=None):

@@ -25,6 +25,23 @@ decomposition is what makes the simulator's losses bit-for-bit reproducible
 on the real transport AND in the scan; byte accounting is the codec's
 measured frame sizes (wire.frame_bytes) — static per event for sparse
 messages, so it is computed ONCE per run (no per-event host sync).
+
+Two event loops share those stages (DESIGN.md §9):
+
+* ``AsyncTrainer.run``          — serial reference: one event at a time.
+* ``AsyncTrainer.run_batched``  — ``batch_schedule`` groups maximal runs of
+  PAIRWISE-DISTINCT workers into one dispatch per stage: the client stage
+  vmaps over the batch (independent stale models), the server receives run
+  as a ``lax.scan`` inside one jit (each event's select must see the M its
+  predecessors left — prefix-dependent, so sequential-in-graph), and the
+  commits fuse into ONE multi-row scatter (disjoint ``v`` rows commute
+  bitwise).  Bit-for-bit equal to the serial loop — losses, params, AND
+  byte accounting (tests/test_async_sim.py).
+
+All batched stages and the serial server/commit/apply stages donate their
+state arguments (``M``/``v``/theta/velocity arenas update in place — no
+per-event buffer churn).  The one exception is the serial client step: see
+``make_client_step`` for why its state stays un-donated.
 """
 from __future__ import annotations
 
@@ -98,6 +115,48 @@ def staleness_of(schedule, n_workers: int) -> np.ndarray:
     return out
 
 
+def batch_schedule(
+    schedule,
+    *,
+    max_batch: int | None = None,
+    cut_every: int | None = None,
+) -> list[np.ndarray]:
+    """Group a schedule into batches of independent events (the batched
+    scheduler view).
+
+    A batch is a maximal run of CONSECUTIVE events with pairwise-distinct
+    workers, truncated to a power-of-two length.  Distinctness is the
+    commutation rule (DESIGN.md §9): within such a run every event reads a
+    different worker model and commits to a different ``v`` row, so the
+    client computes vmap and the commits fuse into one multi-row scatter
+    while remaining bit-equal to serial execution.  The power-of-two
+    truncation bounds jit specialization to O(log n_workers) batch sizes.
+
+    ``cut_every`` forces batch boundaries at multiples of that many events
+    (evaluation points); ``max_batch`` caps the batch size.  Invariant:
+    ``np.concatenate(batch_schedule(s)) == s`` — batching never reorders.
+    """
+    sched = np.asarray(schedule)
+    n = len(sched)
+    batches = []
+    i = 0
+    while i < n:
+        limit = n
+        if cut_every:
+            limit = min(limit, (i // cut_every + 1) * cut_every)
+        if max_batch is not None:
+            limit = min(limit, i + max_batch)
+        seen = set()
+        j = i
+        while j < limit and sched[j] not in seen:
+            seen.add(sched[j])
+            j += 1
+        size = 1 << ((j - i).bit_length() - 1)   # pow2 truncation
+        batches.append(sched[i:i + size])
+        i += size
+    return batches
+
+
 # ---------------------------------------------------------------------------
 # The four per-event stages, decomposed exactly as the cluster runtime runs
 # them (client compute | server receive+select | server commit | client
@@ -137,7 +196,16 @@ def client_step_fn(strategy: Strategy, grad_fn, space: ParamSpace):
 
 
 def make_client_step(strategy: Strategy, grad_fn, space: ParamSpace):
-    """jit(client compute) over the arena model."""
+    """jit(client compute) over the arena model.
+
+    The strategy state is deliberately NOT donated here: donating it lets
+    XLA fuse the momentum update in place, and on CPU that compiles to a
+    program whose DGC velocity arithmetic differs by 1 ulp from the
+    non-donated (and vmapped batched) compilation — which breaks the
+    bit-for-bit serial/batched contract this loop is the reference for.
+    The serial loop is the baseline, not the fast path; the batched loop
+    donates everything (verified bit-equal against this reference).
+    """
     return jax.jit(client_step_fn(strategy, grad_fn, space))
 
 
@@ -155,18 +223,147 @@ def server_step_fn(secondary_density, spec: CompressionSpec):
 
 def make_server_step(secondary_density, spec: CompressionSpec):
     """jit(server): one fused scatter in, one subtract + per-tensor select
-    out (the arena descriptor rides statically inside ServerState)."""
-    return jax.jit(server_step_fn(secondary_density, spec))
+    out (the arena descriptor rides statically inside ServerState).
+    ``sstate`` is donated — the M arena updates in place."""
+    return jax.jit(server_step_fn(secondary_density, spec),
+                   donate_argnums=(0,))
 
 
 def make_commit():
-    """jit(server commit): fold the SHIPPED downward message into v_k."""
-    return jax.jit(ps.send_commit)
+    """jit(server commit): fold the SHIPPED downward message into v_k.
+    ``sstate`` is donated — the v buffer updates in place."""
+    return jax.jit(ps.send_commit, donate_argnums=(0,))
 
 
 def make_apply():
-    """jit(worker apply): theta <- theta + G (Eq. 5) — one arena scatter."""
-    return jax.jit(ps.apply_update)
+    """jit(worker apply): theta <- theta + G (Eq. 5) — one arena scatter.
+    ``theta`` is donated — the worker model updates in place."""
+    return jax.jit(ps.apply_update, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Batched stage factories (run_batched / cluster batched drain).  Worker
+# models and strategy states live STACKED — wp: (n_workers, total), ws: the
+# strategy pytree with a leading (n_workers,) axis — and every stage takes
+# the batch's worker ids, gathering/scattering rows in-graph.  Each factory
+# mirrors its serial twin's jit boundary, so XLA materializes the same
+# stage edges and the arithmetic stays bit-equal (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+def make_batched_client_step(strategy: Strategy, grad_fn, space: ParamSpace):
+    """jit(vmap(client compute)) across the ready-worker batch.
+
+    Takes the stacked worker arenas, gathers the batch rows, vmaps the
+    SAME ``client_step_fn`` body across them (independent stale models —
+    the batching rule guarantees distinct workers), and writes the updated
+    strategy rows back.  Also emits the per-event nnz of dense upward
+    messages (byte accounting without a per-event host sync); donates the
+    stacked strategy state.
+    """
+    vstep = jax.vmap(client_step_fn(strategy, grad_fn, space))
+    dense_msg = not strategy.sparse
+
+    def run(wp, ws, ids, batches, lrs):
+        st = jax.tree.map(lambda s: s[ids], ws)
+        st2, losses, msgs = vstep(wp[ids], st, batches, lrs)
+        ws = jax.tree.map(lambda s, r: s.at[ids].set(r), ws, st2)
+        nnz = (jnp.sum(msgs != 0.0, axis=-1) if dense_msg
+               else jnp.zeros(ids.shape, jnp.int32))
+        return ws, losses, msgs, nnz
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+def make_batched_quantize(mode: str, seg):
+    """jit(vmap(wire.quantize_message)) over a stacked sparse message, or
+    None when quantization is a no-op (mode "none", or dense messages —
+    they travel f32)."""
+    from repro.cluster import wire
+    if mode == "none" or seg is None:
+        return None
+    seg = tuple(int(s) for s in seg)
+    return jax.jit(jax.vmap(
+        lambda m: wire.quantize_message(m, mode, seg=seg)))
+
+
+def batched_server_step_fn(secondary_density, spec: CompressionSpec):
+    """server over a whole batch: receive each message, select each RAW
+    downward message against the M its predecessors left.
+
+    The receives into M are PREFIX-dependent — event i's select must see
+    exactly the post-receive M of events 0..i — so they run as a
+    ``lax.scan`` carrying ``(M, t)`` inside ONE jit: sequential in the
+    graph, one dispatch on the host.  The ``v`` rows read are untouched
+    within the batch (pairwise-distinct workers), so they gather up front.
+
+    Returns ``(sstate, G, M_rows)``: G the stacked raw downward batch;
+    ``M_rows`` the per-event prefix M stack when the downward message is
+    dense (``secondary_density is None`` — the commit's ``v_k <- M`` snap
+    must use M *as of that event*, see ``server.send_commit_rows``), else
+    ``None``.
+    """
+    dense_down = secondary_density is None
+    spec_raw = dataclasses.replace(spec, quantize="none")
+
+    def server_batch(sstate, msgs, ids):
+        v_rows = sstate.v[ids]
+
+        def body(carry, x):
+            M, t = carry
+            msg, v_k = x
+            st = ps.receive(sstate._replace(M=M, t=t), msg)
+            diff = st.M - v_k
+            if dense_down:
+                out = (diff, st.M)
+            else:
+                out = (st.space.select(
+                    diff, st.space.ks(secondary_density), spec_raw),)
+            return (st.M, st.t), out
+
+        (M, t), outs = jax.lax.scan(body, (sstate.M, sstate.t),
+                                    (msgs, v_rows))
+        sstate = sstate._replace(M=M, t=t)
+        if dense_down:
+            return sstate, outs[0], outs[1]
+        return sstate, outs[0], None
+
+    return server_batch
+
+
+def make_batched_server_step(secondary_density, spec: CompressionSpec):
+    """jit(batched server); donates ``sstate``."""
+    return jax.jit(batched_server_step_fn(secondary_density, spec),
+                   donate_argnums=(0,))
+
+
+def make_batched_commit(dense_down: bool):
+    """jit(batched commit): fold a whole SHIPPED batch into its ``v`` rows
+    with ONE fused multi-row scatter (``server.send_commit_rows``).
+
+    The dense variant takes the batched server step's prefix ``M_rows``
+    (snap rule) and also emits each event's downward nnz for byte
+    accounting.  Donates ``sstate``.
+    """
+    if dense_down:
+        def commit(sstate, ids, G, M_rows):
+            sstate = ps.send_commit_rows(sstate, ids, G, M_rows)
+            return sstate, jnp.sum(G != 0.0, axis=-1)
+    else:
+        def commit(sstate, ids, G):
+            return ps.send_commit_rows(sstate, ids, G)
+    return jax.jit(commit, donate_argnums=(0,))
+
+
+def make_batched_apply():
+    """jit(vmap(worker apply)) over the batch rows of the stacked worker
+    models; donates ``wp`` (the (n_workers, total) buffer updates in
+    place)."""
+    vapply = jax.vmap(ps.apply_update)
+
+    def apply_rows(wp, ids, G):
+        return wp.at[ids].set(vapply(wp[ids], G))
+
+    return jax.jit(apply_rows, donate_argnums=(0,))
 
 
 @dataclasses.dataclass
@@ -184,11 +381,52 @@ class AsyncTrainer:
     # engine/quantize spec for the server's secondary (downward) compression
     secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC
 
+    def _serial_stages(self, space: ParamSpace):
+        """The four jitted serial stages, memoized per arena layout.
+
+        ``jax.jit`` caches compilations per wrapper object, so rebuilding
+        the wrappers every :meth:`run` would recompile every stage on
+        every call — the trainer instance keeps them across runs.
+        """
+        cached = getattr(self, "_serial_cache", None)
+        if cached is None or cached[0] != space:
+            stages = (make_client_step(self.strategy, self.grad_fn, space),
+                      make_server_step(self.secondary_density,
+                                       self.secondary_spec),
+                      make_commit(), make_apply())
+            self._serial_cache = cached = (space, stages)
+        return cached[1]
+
+    def _batched_stages(self, space: ParamSpace):
+        """The batched stage bundle (client/server/commit/apply + the two
+        vmapped wire quantizers), memoized like :meth:`_serial_stages`."""
+        cached = getattr(self, "_batched_cache", None)
+        if cached is None or cached[0] != space:
+            up_seg = self.strategy.message_seg(space)
+            down_seg = (None if self.secondary_density is None
+                        else space.ks(self.secondary_density))
+            stages = (
+                make_batched_client_step(self.strategy, self.grad_fn,
+                                         space),
+                make_batched_server_step(self.secondary_density,
+                                         self.secondary_spec),
+                make_batched_commit(self.secondary_density is None),
+                make_batched_apply(),
+                make_batched_quantize(self.strategy.quantize, up_seg),
+                make_batched_quantize(self.secondary_spec.quantize,
+                                      down_seg),
+            )
+            self._batched_cache = cached = (space, stages)
+        return cached[1]
+
     def init(self, params0):
         space = ParamSpace.from_tree(params0)
         theta0 = space.pack(params0)
         workers = [
-            {"theta": theta0, "strat": self.strategy.init(params0)}
+            # per-worker theta COPIES: the apply stage donates its theta
+            # argument, and donating a buffer shared by every worker would
+            # invalidate the others' models
+            {"theta": jnp.copy(theta0), "strat": self.strategy.init(params0)}
             for _ in range(self.n_workers)
         ]
         return ps.init(params0, self.n_workers), workers
@@ -208,10 +446,8 @@ class AsyncTrainer:
 
         space = ParamSpace.from_tree(params0)
         sstate, workers = self.init(params0)
-        client_step = make_client_step(self.strategy, self.grad_fn, space)
-        server_step = make_server_step(self.secondary_density,
-                                       self.secondary_spec)
-        commit, apply_G = make_commit(), make_apply()
+        client_step, server_step, commit, apply_G = \
+            self._serial_stages(space)
         up_mode = self.strategy.quantize
         down_mode = self.secondary_spec.quantize
         up_seg = self.strategy.message_seg(space)
@@ -225,7 +461,12 @@ class AsyncTrainer:
                    if up_seg is not None else None)
         down_cost = (wire.frame_bytes_static(down_seg, space.total, down_mode)
                      if down_seg is not None else None)
-        losses = np.zeros(len(schedule), dtype=np.float64)
+        # history stays ON DEVICE during the loop (scalars per event); it
+        # materializes ONCE at the end — a per-event float(loss) would
+        # round-trip the host and stall the dispatch pipeline every event
+        losses: list = []
+        up_nnz: list = []       # dense up messages: data-dependent nnz
+        down_nnz: list = []     # dense down messages: data-dependent nnz
         up_bytes = down_bytes = 0
         evals = []
         for e, k in enumerate(schedule):
@@ -240,17 +481,136 @@ class AsyncTrainer:
             sstate = commit(sstate, jnp.int32(k), G)
             workers[k]["theta"] = apply_G(workers[k]["theta"], G)
             workers[k]["strat"] = wst
-            losses[e] = float(loss)
-            up_bytes += (up_cost if up_cost is not None
-                         else wire.frame_bytes(msg, mode=up_mode))
-            down_bytes += (down_cost if down_cost is not None
-                           else wire.frame_bytes(G, mode=down_mode))
+            losses.append(loss)
+            if up_cost is not None:
+                up_bytes += up_cost
+            else:
+                up_nnz.append(jnp.count_nonzero(msg))
+            if down_cost is not None:
+                down_bytes += down_cost
+            else:
+                down_nnz.append(jnp.count_nonzero(G))
             if eval_fn is not None and eval_every and (e + 1) % eval_every == 0:
                 model = ps.global_model(params0, sstate)
                 evals.append((e + 1, eval_fn(model)))
         final = ps.global_model(params0, sstate)
+        if up_nnz:
+            up_bytes += int(np.sum(
+                wire.ENVELOPE_BYTES
+                + wire.dense_frame_bytes(np.asarray(jnp.stack(up_nnz)),
+                                         space.total)))
+        if down_nnz:
+            down_bytes += int(np.sum(
+                wire.ENVELOPE_BYTES
+                + wire.dense_frame_bytes(np.asarray(jnp.stack(down_nnz)),
+                                         space.total)))
         hist = History(
-            losses=losses,
+            losses=np.asarray(jnp.stack(losses), np.float64),
+            worker_ids=np.asarray(schedule),
+            staleness=staleness_of(schedule, self.n_workers),
+            up_bytes=up_bytes,
+            down_bytes=down_bytes,
+            evals=evals,
+        )
+        return final, sstate, hist
+
+    def run_batched(
+        self,
+        params0,
+        schedule: np.ndarray,
+        batch_fn: Callable[[int, int], Any],
+        *,
+        lr_fn: Callable[[int], float] | None = None,
+        eval_fn: Callable | None = None,
+        eval_every: int = 0,
+        max_batch: int | None = None,
+    ):
+        """Batched event loop — bit-for-bit equal to :meth:`run`.
+
+        ``batch_schedule`` groups runs of pairwise-distinct workers; each
+        batch then costs ONE dispatch per stage (vmapped client compute,
+        scanned server receive+select, fused multi-row commit, vmapped
+        apply) instead of four-plus dispatches per event.  Worker models
+        and strategy states live stacked — ``(n_workers, total)`` arenas —
+        and every stage donates its state, so the whole fleet updates in
+        place.  Losses, final params, and byte accounting match the serial
+        loop exactly on the same schedule (tests/test_async_sim.py).
+        """
+        from repro.cluster import wire
+
+        space = ParamSpace.from_tree(params0)
+        sstate = ps.init(params0, self.n_workers)
+        theta0 = space.pack(params0)
+        n = self.n_workers
+        # jnp.copy: donation needs owned buffers, not broadcast views
+        wp = jnp.copy(jnp.broadcast_to(theta0[None], (n, space.total)))
+        ws = jax.tree.map(
+            lambda s: jnp.copy(jnp.broadcast_to(s[None], (n,) + s.shape)),
+            self.strategy.init(params0))
+        client, server, commit, apply_rows, q_up, q_down = \
+            self._batched_stages(space)
+        dense_down = self.secondary_density is None
+        up_mode = self.strategy.quantize
+        down_mode = self.secondary_spec.quantize
+        up_seg = self.strategy.message_seg(space)
+        down_seg = None if dense_down else space.ks(self.secondary_density)
+        up_cost = (wire.frame_bytes_static(up_seg, space.total, up_mode)
+                   if up_seg is not None else None)
+        down_cost = (wire.frame_bytes_static(down_seg, space.total,
+                                             down_mode)
+                     if down_seg is not None else None)
+
+        batches = batch_schedule(schedule, max_batch=max_batch,
+                                 cut_every=eval_every or None)
+        losses, up_nnz, down_nnz, evals = [], [], [], []
+        e = 0
+        for ids_np in batches:
+            b = len(ids_np)
+            # numpy operands: the jit call converts them on its C++ fast
+            # path — cheaper than one eager device dispatch per array
+            ids = np.asarray(ids_np, np.int32)
+            lrs = np.asarray(
+                [self.lr if lr_fn is None else float(lr_fn(e + i))
+                 for i in range(b)], np.float32)
+            data = [batch_fn(e + i, int(k)) for i, k in enumerate(ids_np)]
+            data = jax.tree.map(lambda *xs: jnp.stack(xs), *data)
+            ws, batch_losses, msgs, nnz_up = client(wp, ws, ids, data, lrs)
+            if q_up is not None:
+                msgs = q_up(msgs)
+            sstate, G, M_rows = server(sstate, msgs, ids)
+            if dense_down:
+                sstate, nnz_dn = commit(sstate, ids, G, M_rows)
+                down_nnz.append(nnz_dn)
+            else:
+                if q_down is not None:
+                    G = q_down(G)
+                sstate = commit(sstate, ids, G)
+            wp = apply_rows(wp, ids, G)
+            losses.append(batch_losses)
+            if up_cost is None:
+                up_nnz.append(nnz_up)
+            e += b
+            if eval_fn is not None and eval_every and e % eval_every == 0:
+                model = ps.global_model(params0, sstate)
+                evals.append((e, eval_fn(model)))
+        final = ps.global_model(params0, sstate)
+        n_events = len(schedule)
+        if up_cost is not None:
+            up_bytes = up_cost * n_events
+        else:
+            up_bytes = int(np.sum(
+                wire.ENVELOPE_BYTES
+                + wire.dense_frame_bytes(
+                    np.asarray(jnp.concatenate(up_nnz)), space.total)))
+        if down_cost is not None:
+            down_bytes = down_cost * n_events
+        else:
+            down_bytes = int(np.sum(
+                wire.ENVELOPE_BYTES
+                + wire.dense_frame_bytes(
+                    np.asarray(jnp.concatenate(down_nnz)), space.total)))
+        hist = History(
+            losses=np.asarray(jnp.concatenate(losses), np.float64),
             worker_ids=np.asarray(schedule),
             staleness=staleness_of(schedule, self.n_workers),
             up_bytes=up_bytes,

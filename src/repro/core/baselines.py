@@ -20,7 +20,7 @@ M <- M - decode(msg)).
 All top-k selection goes through core/engine.py: every sparse strategy has
 an ``engine`` knob ("exact" | "sampled" | "blockwise" | "auto") and a
 ``quantize`` wire-quantization knob — they compose uniformly instead of
-being DGS-only (DESIGN.md §Compression-engine).  ``message_seg`` exposes
+being DGS-only (DESIGN.md §10 Compression-engine).  ``message_seg`` exposes
 the static per-tensor entry counts of the message (the wire codec's arena
 frame segmentation).
 """
@@ -142,8 +142,12 @@ class DGCAsync(_SparseStrategy):
 
     def init(self, params):
         space = ParamSpace.from_tree(params)
-        z = jnp.zeros((space.total,), jnp.float32)
-        return StrategyState(inner=_DGCState(velocity=z, residual=z))
+        # two separate allocations: the jitted client stage donates its
+        # strategy-state buffers (in-place velocity/residual updates), and
+        # donating one buffer twice through aliased leaves is an error
+        return StrategyState(inner=_DGCState(
+            velocity=jnp.zeros((space.total,), jnp.float32),
+            residual=jnp.zeros((space.total,), jnp.float32)))
 
     def step(self, state, grads, lr):
         space = ParamSpace.from_tree(grads)

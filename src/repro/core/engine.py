@@ -9,7 +9,7 @@ and the mesh collectives (distributed.py) — reduces to the same operator:
     rescale the unsent remainder so its mass telescopes into the velocity.
 
 This module is the single implementation of that operator (DESIGN.md
-§Compression-engine).  Three engines share the semantics contract written
+§10 Compression-engine).  Three engines share the semantics contract written
 down in ``kernels/ref.py``:
 
 * ``exact``     — ``lax.top_k`` over |x|.  The oracle: every other engine

@@ -25,6 +25,8 @@ to what ``wire.frame_bytes`` measures event-by-event in the python loop.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -124,7 +126,11 @@ def run_async_scan(
         ws = jax.tree.map(lambda x, v: x.at[k].set(v), ws, strat_k)
         return (sstate, wp, ws), (loss, dense_nnz(msg), dense_nnz(G))
 
-    @jax.jit
+    # ``sstate0`` is built fresh above and returned updated, so its arenas
+    # (M and the fleet-sized v buffer) alias the output in place.  wp0/ws0
+    # are scan-carry-only (never returned), so donating them could not
+    # alias anything — XLA double-buffers scan carries internally.
+    @partial(jax.jit, donate_argnums=(0,))
     def run(sstate0, wp0, ws0, schedule, batches):
         (sstate, _, _), out = jax.lax.scan(
             event, (sstate0, wp0, ws0),

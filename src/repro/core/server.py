@@ -109,6 +109,36 @@ def send_commit(state: ServerState, worker_id, G) -> ServerState:
     return state._replace(v=new_v)
 
 
+def send_commit_rows(state: ServerState, worker_ids, G,
+                     M_rows=None) -> ServerState:
+    """Account a whole batch of SHIPPED messages into their ``v`` rows.
+
+    The batched event loop's commit stage (Eq. 4, one event per batch
+    lane).  ``worker_ids`` must be pairwise distinct — the scheduler's
+    batching rule (``async_sim.batch_schedule``) guarantees it — so the
+    rows are disjoint and ONE fused multi-row scatter
+    (``kernels.ops.scatter_add_rows``) is bit-equal to committing the
+    events one :func:`send_commit` at a time in any order.
+
+    ``G`` is the stacked shipped batch: one SparseLeaf with ``(B, k)``
+    values/indices, or a dense ``(B, total)`` stack.  Dense commits snap
+    each row to the server's M *as of that event* (the same
+    cancellation-avoiding rule as :func:`send_commit`), which is the
+    ``M_rows[i]`` prefix state the batched receive scan captured — not
+    the post-batch M.
+    """
+    if isinstance(G, SparseLeaf):
+        from repro.kernels import ops
+        new_v = ops.scatter_add_rows(state.v, worker_ids, G.indices,
+                                     G.values)
+    else:
+        if M_rows is None:
+            raise ValueError("dense batched commit needs the per-event "
+                             "prefix M_rows (see batched_server_step_fn)")
+        new_v = state.v.at[worker_ids].set(M_rows)
+    return state._replace(v=new_v)
+
+
 def send(
     state: ServerState,
     worker_id,

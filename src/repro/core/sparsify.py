@@ -7,7 +7,7 @@ and exchange fixed-size ``(values, indices)`` pairs — the static-shape COO of
 DESIGN.md §3.
 
 Two selection primitives live here and are composed into the pluggable
-engines of ``core/engine.py`` (DESIGN.md §Compression-engine) — call sites
+engines of ``core/engine.py`` (DESIGN.md §10 Compression-engine) — call sites
 should go through the engine layer rather than these directly:
 
 * ``topk_select`` — exact ``lax.top_k`` over |x| (the ``exact`` engine and

@@ -107,6 +107,57 @@ def scatter_add_row(dense2d, row, indices, values, *,
     return dense2d.at[row].set(new_row)
 
 
+def scatter_add_rows(dense2d, rows, idx2d, vals2d, *,
+                     interpret: bool | None = None):
+    """Batched multi-row scatter-add — the batched commit stage's ONE op.
+
+    ``dense2d.at[rows[b], idx2d[b]].add(vals2d[b])`` for every batch lane
+    ``b``.  ``rows`` must be pairwise distinct (the batching rule —
+    ``async_sim.batch_schedule``); the per-lane scatters then touch
+    disjoint rows, so one fused scatter is bit-equal to any serial order
+    of :func:`scatter_add_row` calls.  Off-TPU this is a single 2-D XLA
+    scatter; on TPU the rows are gathered, run through the blocked
+    multi-row Pallas kernel (grid over (lane, block)), and written back.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret:
+        return dense2d.at[rows[:, None], idx2d].add(
+            vals2d.astype(dense2d.dtype))
+    sub = scatter_apply_rows(dense2d[rows], idx2d, vals2d, interpret=False)
+    return dense2d.at[rows].set(sub)
+
+
+def _bucket_blocked(n_pad: int, block: int, cap: int, indices, values,
+                    out_dtype):
+    """Bucket flat scatter updates by dense block (sort + rank).
+
+    Returns ``(vals2d, offs2d, spill)``: the ``(nb, cap)`` kernel inputs
+    (block-local offsets, -1 = padding) and a ``(n_pad,)`` XLA-scatter
+    remainder for updates past ``cap`` in their block (exactness guard).
+    Shared by the flat and multi-row scatter wrappers.
+    """
+    nb = n_pad // block
+    k = values.shape[0]
+    block_of = indices // block
+    order = jnp.argsort(block_of)
+    b_s = block_of[order]
+    i_s = indices[order]
+    v_s = values[order].astype(jnp.float32)
+    rank = jnp.arange(k, dtype=jnp.int32) - jnp.searchsorted(
+        b_s, b_s, side="left").astype(jnp.int32)
+    ok = rank < cap
+    slot = jnp.where(ok, b_s * cap + rank, nb * cap)
+    vals2d = jnp.zeros((nb * cap + 1,), jnp.float32).at[slot].add(
+        jnp.where(ok, v_s, 0.0))[:-1].reshape(nb, cap)
+    offs2d = jnp.full((nb * cap + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(ok, i_s % block, -1))[:-1].reshape(nb, cap)
+    spill = jnp.zeros((n_pad,), out_dtype).at[
+        jnp.where(ok, n_pad, i_s)].add(
+        jnp.where(ok, 0.0, v_s).astype(out_dtype), mode="drop")
+    return vals2d, offs2d, spill
+
+
 @partial(jax.jit, static_argnames=("cap", "interpret"))
 def scatter_apply(dense, indices, values, *, cap: int | None = None,
                   interpret: bool = True):
@@ -119,28 +170,40 @@ def scatter_apply(dense, indices, values, *, cap: int | None = None,
     """
     from .scatter_apply import BLOCK, scatter_apply_blocked
     shape = dense.shape
-    flat, pad = _pad_to(dense.reshape(-1), BLOCK)
+    flat, _ = _pad_to(dense.reshape(-1), BLOCK)
     nb = flat.shape[0] // BLOCK
     k = values.shape[0]
     cap = min(k, cap) if cap else k
-    block_of = indices // BLOCK
-    order = jnp.argsort(block_of)
-    b_s = block_of[order]
-    i_s = indices[order]
-    v_s = values[order].astype(jnp.float32)
-    rank = jnp.arange(k, dtype=jnp.int32) - jnp.searchsorted(
-        b_s, b_s, side="left").astype(jnp.int32)
-    ok = rank < cap
-    slot = jnp.where(ok, b_s * cap + rank, nb * cap)
-    vals2d = jnp.zeros((nb * cap + 1,), jnp.float32).at[slot].add(
-        jnp.where(ok, v_s, 0.0))[:-1].reshape(nb, cap)
-    offs2d = jnp.full((nb * cap + 1,), -1, jnp.int32).at[slot].set(
-        jnp.where(ok, i_s % BLOCK, -1))[:-1].reshape(nb, cap)
-    # overflow beyond cap falls back to XLA scatter (exactness guard)
-    spill = jnp.zeros_like(flat).at[jnp.where(ok, flat.shape[0], i_s)].add(
-        jnp.where(ok, 0.0, v_s).astype(dense.dtype), mode="drop")
+    vals2d, offs2d, spill = _bucket_blocked(
+        flat.shape[0], BLOCK, cap, indices, values, dense.dtype)
     out = scatter_apply_blocked(flat.reshape(nb, BLOCK),
                                 vals2d, offs2d, interpret=interpret)
     out = out.reshape(-1) + spill
     n = dense.size
     return out[:n].reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("cap", "interpret"))
+def scatter_apply_rows(dense2d, idx2d, vals2d, *, cap: int | None = None,
+                       interpret: bool = True):
+    """Row-wise ``dense2d[b].at[idx2d[b]].add(vals2d[b])`` via ONE blocked
+    Pallas dispatch over a (row, block) grid.
+
+    The bucketing is the same sort + rank as :func:`scatter_apply`, vmapped
+    over the batch lanes; the kernel then streams every lane's blocks
+    through VMEM in a single pallas_call instead of one dispatch per lane.
+    """
+    from .scatter_apply import BLOCK, scatter_apply_blocked_rows
+    n_rows, n = dense2d.shape
+    pad = (-n) % BLOCK
+    flat = jnp.pad(dense2d, ((0, 0), (0, pad))) if pad else dense2d
+    nb = flat.shape[1] // BLOCK
+    k = vals2d.shape[1]
+    cap = min(k, cap) if cap else k
+    vals3d, offs3d, spill = jax.vmap(
+        lambda i, v: _bucket_blocked(flat.shape[1], BLOCK, cap, i, v,
+                                     dense2d.dtype))(idx2d, vals2d)
+    out = scatter_apply_blocked_rows(flat.reshape(n_rows, nb, BLOCK),
+                                     vals3d, offs3d, interpret=interpret)
+    out = out.reshape(n_rows, -1) + spill
+    return out[:, :n]

@@ -60,3 +60,43 @@ def scatter_apply_blocked(dense2d, vals2d, offs2d, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct(dense2d.shape, dense2d.dtype),
         interpret=interpret,
     )(vals2d, offs2d, dense2d)
+
+
+def _rows_kernel(vals_ref, offs_ref, dense_ref, out_ref, *, cap: int):
+    block = dense_ref[...]          # (1, 1, BLOCK)
+    vals = vals_ref[...]            # (1, 1, CAP)
+    offs = offs_ref[...]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, block.shape, 2)
+
+    def body(j, acc):
+        off = offs[0, 0, j]
+        val = vals[0, 0, j]
+        hit = (lanes == off) & (off >= 0)
+        return acc + jnp.where(hit, val, 0.0).astype(acc.dtype)
+
+    out_ref[...] = jax.lax.fori_loop(0, cap, body, block)
+
+
+def scatter_apply_blocked_rows(dense3d, vals3d, offs3d, *,
+                               interpret: bool = True):
+    """Multi-row variant for the batched event loop's commit stage.
+
+    dense3d: (n_rows, nb, BLOCK) — one blocked parameter row per batch
+    lane; vals3d/offs3d: (n_rows, nb, CAP) per-lane bucketed updates.  The
+    grid is (n_rows, nb): every lane's every block streams through VMEM
+    exactly once, so a whole commit batch costs the same HBM traffic as
+    one row costs per lane — no per-event dispatch, no atomics (rows are
+    disjoint by construction, the grid is sequential anyway).
+    """
+    n_rows, nb, cap = vals3d.shape
+    assert dense3d.shape == (n_rows, nb, BLOCK), (dense3d.shape, n_rows, nb)
+    spec_d = pl.BlockSpec((1, 1, BLOCK), lambda b, i: (b, i, 0))
+    spec_u = pl.BlockSpec((1, 1, cap), lambda b, i: (b, i, 0))
+    return pl.pallas_call(
+        functools.partial(_rows_kernel, cap=cap),
+        grid=(n_rows, nb),
+        in_specs=[spec_u, spec_u, spec_d],
+        out_specs=spec_d,
+        out_shape=jax.ShapeDtypeStruct(dense3d.shape, dense3d.dtype),
+        interpret=interpret,
+    )(vals3d, offs3d, dense3d)

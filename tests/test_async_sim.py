@@ -1,4 +1,5 @@
 import numpy as np
+import pytest
 
 from repro.core import async_sim
 
@@ -41,3 +42,147 @@ def test_staleness_grows_with_workers():
         _, _, hist = tr.run(params0, sched, batch_fn)
         stats.append(hist.staleness[n * 2:].mean())
     assert stats[1] > stats[0]
+
+
+# ---------------------------------------------------------------------------
+# batched event loop: scheduling properties + bit-for-bit parity
+# ---------------------------------------------------------------------------
+
+def test_batch_schedule_partition_properties():
+    for seed in range(5):
+        sched = async_sim.make_schedule(7, 200, seed=seed, hetero=0.8)
+        batches = async_sim.batch_schedule(sched)
+        # exact partition: concatenating the batches recovers the schedule
+        np.testing.assert_array_equal(np.concatenate(batches), sched)
+        for b in batches:
+            assert len(set(int(x) for x in b)) == len(b)  # distinct workers
+            assert len(b) & (len(b) - 1) == 0             # power of two
+
+
+def test_batch_schedule_max_batch_and_cut_every():
+    sched = async_sim.make_schedule(9, 300, seed=2, hetero=0.3)
+    for max_batch, cut_every in [(4, None), (None, 16), (8, 24)]:
+        batches = async_sim.batch_schedule(sched, max_batch=max_batch,
+                                           cut_every=cut_every)
+        np.testing.assert_array_equal(np.concatenate(batches), sched)
+        i = 0
+        for b in batches:
+            if max_batch is not None:
+                assert len(b) <= max_batch
+            if cut_every is not None:
+                # a batch never straddles an eval boundary
+                assert i // cut_every == (i + len(b) - 1) // cut_every
+            i += len(b)
+
+
+def _parity_problem():
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    params0 = {
+        "w1": jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32)),
+        "b1": jnp.zeros(16),
+        "w2": jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32)),
+    }
+    X = jnp.asarray(rng.normal(size=(64, 12)).astype(np.float32))
+    Y = jnp.asarray(rng.integers(0, 4, 64))
+
+    def grad_fn(p, batch):
+        x, y = batch
+
+        def loss(q):
+            h = jnp.tanh(x @ q["w1"] + q["b1"]) @ q["w2"]
+            lp = jax.nn.log_softmax(h)
+            return -jnp.mean(lp[jnp.arange(x.shape[0]), y])
+
+        return jax.value_and_grad(loss)(p)
+
+    def batch_fn(e, k):
+        i = (e * 7 + k * 3) % 56
+        return (X[i:i + 8], Y[i:i + 8])
+
+    return params0, grad_fn, batch_fn
+
+
+def _assert_runs_equal(tr, params0, sched, batch_fn, **kw):
+    import jax
+
+    f1, s1, h1 = tr.run(params0, sched, batch_fn, **kw)
+    f2, s2, h2 = tr.run_batched(params0, sched, batch_fn, **kw)
+    np.testing.assert_array_equal(h1.losses, h2.losses)
+    assert h1.up_bytes == h2.up_bytes
+    assert h1.down_bytes == h2.down_bytes
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s1.M), np.asarray(s2.M))
+    np.testing.assert_array_equal(np.asarray(s1.v), np.asarray(s2.v))
+    return h1, h2
+
+
+_PARITY_CONFIGS = [
+    # (strategy, kwargs, secondary_density, down_quantize, engine)
+    ("dgs", dict(density=0.1), 0.1, "int8", "exact"),
+    ("dgs", dict(density=0.2), 0.15, "bf16", "sampled"),
+    ("dgs", dict(density=0.1), 0.1, "tern", "blockwise"),
+    ("dgc_async", dict(density=0.1), 0.1, "none", "exact"),
+    ("asgd", dict(), None, "none", "exact"),
+    ("gd_async", dict(density=0.1), 0.1, "int8", "exact"),
+]
+
+
+@pytest.mark.parametrize("name,kw,sec,dq,eng", _PARITY_CONFIGS)
+def test_batched_matches_serial_bitwise(name, kw, sec, dq, eng):
+    """The tentpole contract: run_batched == run, bit for bit — losses,
+    byte accounting, final params, and server state — across strategies,
+    compression engines, and wire quantize modes."""
+    from repro.core import engine as engine_lib
+    from repro.core import make_strategy
+
+    specs = {
+        "exact": engine_lib.CompressionSpec(engine="exact", quantize=dq),
+        "sampled": engine_lib.CompressionSpec(engine="sampled", quantize=dq),
+        "blockwise": engine_lib.CompressionSpec(engine="blockwise",
+                                                quantize=dq, block_r=4),
+    }
+    params0, grad_fn, batch_fn = _parity_problem()
+    sched = async_sim.make_schedule(5, 40, seed=3, hetero=0.8)
+    tr = async_sim.AsyncTrainer(make_strategy(name, **kw), grad_fn, 5,
+                                lr=0.05, secondary_density=sec,
+                                secondary_spec=specs[eng])
+    _assert_runs_equal(tr, params0, sched, batch_fn)
+
+
+def test_batched_matches_serial_with_lr_fn_and_eval():
+    from repro.core import make_strategy
+    from repro.core.paramspace import ParamSpace
+
+    params0, grad_fn, batch_fn = _parity_problem()
+    sched = async_sim.make_schedule(5, 40, seed=1, hetero=0.5)
+    tr = async_sim.AsyncTrainer(make_strategy("dgs", density=0.1), grad_fn,
+                                5, lr=0.05, secondary_density=0.1)
+    space = ParamSpace.from_tree(params0)
+
+    def eval_fn(model):
+        return float(np.asarray(space.pack(model)).sum())
+
+    h1, h2 = _assert_runs_equal(tr, params0, sched, batch_fn,
+                                lr_fn=lambda e: 0.05 / (1 + 0.01 * e),
+                                eval_fn=eval_fn, eval_every=8)
+    assert [e for e, _ in h1.evals] == [e for e, _ in h2.evals]
+    assert [v for _, v in h1.evals] == [v for _, v in h2.evals]
+
+
+def test_batched_max_batch_one_matches_serial():
+    from repro.core import make_strategy
+
+    params0, grad_fn, batch_fn = _parity_problem()
+    sched = async_sim.make_schedule(4, 24, seed=6, hetero=0.5)
+    tr = async_sim.AsyncTrainer(make_strategy("dgc_async", density=0.1),
+                                grad_fn, 4, lr=0.05, secondary_density=0.1)
+    f1, s1, h1 = tr.run(params0, sched, batch_fn)
+    f2, s2, h2 = tr.run_batched(params0, sched, batch_fn, max_batch=1)
+    np.testing.assert_array_equal(h1.losses, h2.losses)
+    import jax
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

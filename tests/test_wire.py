@@ -220,3 +220,62 @@ class TestMessage:
             for a, b in zip(shipped, local):
                 np.testing.assert_array_equal(np.asarray(a.values),
                                               np.asarray(b.values))
+
+
+# ------------------------------------------- fused quantize+pack kernel
+
+class TestPackFromArena:
+    """wire.pack_from_arena (the fused kernels/wire_pack.py path) against
+    the legacy per-segment encoder it replaced."""
+
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("sizes", [(37, 400, 63), (5, 3), (1000,)])
+    def test_frames_byte_identical_to_segment_encoder(self, mode, sizes):
+        size = 70000
+        k = sum(sizes)
+        rng = np.random.default_rng(hash((mode, sizes)) % 2 ** 31)
+        leaf = SparseLeaf(
+            values=jnp.asarray(rng.normal(size=k).astype(np.float32)),
+            indices=jnp.asarray(np.sort(rng.choice(size, k, replace=False))
+                                .astype(np.int32)),
+            size=size)
+        legacy, ship_legacy = wire.encode_arena_leaf_segments(
+            leaf, mode, sizes)
+        fused, ship_fused = wire.pack_from_arena(leaf, mode, sizes)
+        assert fused == legacy                      # byte-for-byte frame
+        np.testing.assert_array_equal(np.asarray(ship_fused.values),
+                                      np.asarray(ship_legacy.values))
+        np.testing.assert_array_equal(np.asarray(ship_fused.indices),
+                                      np.asarray(ship_legacy.indices))
+        # and the frame still decodes to exactly the shipped values
+        _, dec, off = wire.decode_leaf(fused)
+        assert off == len(fused)
+        np.testing.assert_array_equal(np.asarray(dec.values),
+                                      np.asarray(ship_fused.values))
+
+    @pytest.mark.parametrize("mode", ("bf16", "int8", "tern"))
+    def test_quantize_pack_pallas_interpret_matches_xla(self, mode):
+        from repro.kernels import wire_pack
+
+        seg = (100, 30, 126)
+        k = sum(seg)
+        rng = np.random.default_rng(11)
+        values = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        codes_x, scales_x, dq_x = wire_pack.quantize_pack(
+            values, mode=mode, seg=seg, pallas=False)
+        codes_p, scales_p, dq_p = wire_pack.quantize_pack(
+            values, mode=mode, seg=seg, pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(codes_x),
+                                      np.asarray(codes_p))
+        np.testing.assert_array_equal(np.asarray(scales_x),
+                                      np.asarray(scales_p))
+        np.testing.assert_array_equal(np.asarray(dq_x), np.asarray(dq_p))
+
+    def test_narrow_indices_widths(self):
+        from repro.kernels import wire_pack
+
+        idx = jnp.asarray([0, 17, 255], jnp.int32)
+        assert wire_pack.narrow_indices(idx, size=256).dtype == jnp.uint8
+        assert wire_pack.narrow_indices(idx, size=257).dtype == jnp.uint16
+        assert wire_pack.narrow_indices(idx, size=1 << 17).dtype \
+            == jnp.uint32
