@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
+
 from .common import (csv_row, make_classification_problem, mlp_apply,
                      mlp_init, record_perf, run_strategy)
 
@@ -264,12 +266,15 @@ def run_batched_loop(quick: bool = False):
               "quantize": "int8", "secondary_density": 0.05,
               "n_workers": n_workers, "n_events": n_events}
     nbytes = h_b.up_bytes + h_b.down_bytes
+    # schema-v2 rows carry the run's staleness distribution so the
+    # artifact shows WHAT schedule shape produced the throughput number
+    hists = {"staleness": telemetry.metrics.summarize_log2(h_b.staleness)}
     record_perf("scalability", "serial_loop", config=config,
                 events_per_sec=n_events / dt_serial, nbytes=nbytes,
-                wall_clock_s=dt_serial)
+                wall_clock_s=dt_serial, hists=hists)
     record_perf("scalability", "batched_loop", config=config,
                 events_per_sec=n_events / dt_batched, nbytes=nbytes,
-                wall_clock_s=dt_batched)
+                wall_clock_s=dt_batched, hists=hists)
     rows = [
         csv_row("batched/serial_loop", dt_serial / n_events * 1e6,
                 f"events={n_events}"),

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import json
 import pathlib
+import platform
+import socket
 import subprocess
 import time
 
@@ -30,6 +32,22 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # record_perf and run.py / --smoke entries flush to BENCH_<name>.json
 _PERF: dict[str, list[dict]] = {}
 
+# BENCH_*.json schema: 2 adds schema_version + env provenance (hostname,
+# platform, python/jax versions, backend) and optional per-row histograms
+SCHEMA_VERSION = 2
+
+
+def bench_environment() -> dict:
+    """Where the numbers came from — enough to judge row comparability."""
+    return {
+        "hostname": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
 
 def git_commit() -> str:
     try:
@@ -42,32 +60,43 @@ def git_commit() -> str:
 
 def record_perf(bench: str, name: str, *, config: dict,
                 events_per_sec: float, nbytes: int,
-                wall_clock_s: float) -> None:
+                wall_clock_s: float, hists: dict | None = None,
+                extras: dict | None = None) -> None:
     """Book one measurement for the ``BENCH_<bench>.json`` artifact.
 
     ``config`` is the measurement's full parameterization (model size,
     workers, events, strategy...) so a row is reproducible from the
-    artifact alone.
+    artifact alone.  ``hists`` attaches flight-recorder histograms
+    (e.g. ``telemetry.metrics.summarize_log2`` of per-event staleness);
+    ``extras`` merges arbitrary scalar context into the row.
     """
-    _PERF.setdefault(bench, []).append({
+    row = {
         "name": name,
         "config": config,
         "events_per_sec": round(float(events_per_sec), 3),
         "bytes": int(nbytes),
         "wall_clock_s": round(float(wall_clock_s), 6),
-    })
+    }
+    if extras:
+        row.update(extras)
+    if hists:
+        row["hists"] = hists
+    _PERF.setdefault(bench, []).append(row)
 
 
 def write_bench_artifacts(root: pathlib.Path | None = None) -> list[str]:
     """Flush every recorded bench to ``BENCH_<name>.json`` at the repo
-    root (commit + measurement rows); returns the paths written."""
+    root (schema v2: commit + environment + measurement rows); returns
+    the paths written."""
     root = pathlib.Path(root) if root is not None else REPO_ROOT
     commit = git_commit()
+    env = bench_environment()
     written = []
     for bench, rows in sorted(_PERF.items()):
         path = root / f"BENCH_{bench}.json"
         path.write_text(json.dumps(
-            {"commit": commit, "bench": bench, "rows": rows}, indent=2)
+            {"schema_version": SCHEMA_VERSION, "commit": commit,
+             "environment": env, "bench": bench, "rows": rows}, indent=2)
             + "\n")
         written.append(str(path))
     return written

@@ -8,7 +8,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if command -v ruff >/dev/null 2>&1; then
-  ruff check src tests
+  ruff check src tests benchmarks scripts
 else
   echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
 fi
@@ -19,4 +19,9 @@ python -m pytest -q -x "$@"
 timeout 600 python -m benchmarks.bench_scalability --smoke
 test -s BENCH_scalability.json || {
   echo "FAIL: BENCH_scalability.json not written"; exit 1; }
-timeout 300 python -m repro.launch.cluster --smoke
+# telemetry smoke: the same socket smoke with the flight recorder on;
+# the report gate asserts trace.json + events.jsonl were written, parse,
+# and carry the staleness + bytes histograms
+rm -rf .ci_telemetry
+timeout 300 python -m repro.launch.cluster --smoke --trace-dir .ci_telemetry
+python scripts/report.py .ci_telemetry --check >/dev/null

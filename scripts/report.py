@@ -1,0 +1,230 @@
+#!/usr/bin/env python
+"""Render a flight-recorder run directory into a human-readable report.
+
+    python scripts/report.py RUN_DIR [--out report.md] [--check]
+
+``RUN_DIR`` is wherever a :class:`repro.telemetry.Recorder` flushed its
+artifacts (``--trace-dir`` on the cluster launcher, or any test/bench that
+passed ``recorder=Recorder(dir)``).  The report is plain markdown (renders
+in a terminal as-is): run summary, staleness distribution, up/down frame
+size histograms, the bytes-vs-loss curve, a per-stage wall-clock breakdown
+aggregated from the Chrome-trace spans, and a per-client fault/retry table
+from the counters record.
+
+``--check`` is the CI mode: exit nonzero unless both artifacts exist,
+parse, and the report contains the staleness and bytes sections — the
+telemetry smoke gate in scripts/ci.sh.
+
+Stdlib only: no repro imports, so the report renders anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+TRACE_FILE = "trace.json"
+EVENTS_FILE = "events.jsonl"
+BAR_WIDTH = 40
+
+
+def load_run(run_dir: pathlib.Path):
+    """Parse (trace_events, jsonl_records); raises on missing/corrupt."""
+    trace = json.loads((run_dir / TRACE_FILE).read_text())
+    if "traceEvents" not in trace:
+        raise ValueError(f"{TRACE_FILE}: no traceEvents key")
+    events = []
+    for i, line in enumerate((run_dir / EVENTS_FILE).read_text().splitlines()):
+        if not line.strip():
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError as exc:
+            raise ValueError(f"{EVENTS_FILE}:{i + 1}: {exc}") from exc
+    return trace["traceEvents"], events
+
+
+def _last(events, kind):
+    found = None
+    for e in events:
+        if e.get("kind") == kind:
+            found = e
+    return found
+
+
+def render_hist(hist: dict, title: str) -> list[str]:
+    """One ``{"bins": [...], "counts": [...]}`` histogram as an ascii
+    bar chart."""
+    counts = hist.get("counts", [])
+    bins = hist.get("bins", [])
+    total = sum(counts)
+    out = [f"### {title}", ""]
+    if not total:
+        out += ["(empty)", ""]
+        return out
+    peak = max(counts)
+    for label, c in zip(bins, counts):
+        bar = "#" * max(1 if c else 0, round(c / peak * BAR_WIDTH))
+        out.append(f"    {label:>16}  {c:>8}  {bar}")
+    out += ["", f"    total: {total}", ""]
+    return out
+
+
+def render_summary(summary: dict) -> list[str]:
+    out = ["## Run summary", ""]
+    rows = [("runner", summary.get("runner")),
+            ("events", summary.get("n_events")),
+            ("up bytes", summary.get("up_bytes")),
+            ("down bytes", summary.get("down_bytes")),
+            ("first loss", summary.get("loss_first")),
+            ("last loss", summary.get("loss_last"))]
+    for k, v in rows:
+        if v is not None:
+            out.append(f"- **{k}**: {v}")
+    metrics = summary.get("metrics") or {}
+    counters = metrics.get("counters") or {}
+    run_level = {k: v for k, v in counters.items() if "/" not in k}
+    if run_level:
+        out.append("- **messages**: " + ", ".join(
+            f"{k}={int(v)}" for k, v in sorted(run_level.items())))
+    out.append("")
+    return out
+
+
+def render_bytes_vs_loss(events) -> list[str]:
+    """The paper's central trade-off, from the progress/eval stream."""
+    points = []
+    for e in events:
+        if e.get("kind") == "progress":
+            points.append((e.get("up_bytes", 0) + e.get("down_bytes", 0),
+                           e.get("event"), e.get("loss"), None))
+        elif e.get("kind") == "eval":
+            points.append((None, e.get("event"), None, e.get("metric")))
+    if not points:
+        return []
+    out = ["## Bytes vs loss", "",
+           "| event | cumulative bytes | loss | eval |",
+           "|---:|---:|---:|---:|"]
+    # subsample long runs to ~20 rows; always keep the last point
+    keep = max(1, len(points) // 20)
+    sampled = points[::keep]
+    if sampled[-1] is not points[-1]:
+        sampled.append(points[-1])
+    for nbytes, event, loss, metric in sampled:
+        out.append("| {} | {} | {} | {} |".format(
+            event if event is not None else "",
+            nbytes if nbytes is not None else "",
+            f"{loss:.4f}" if loss is not None else "",
+            f"{metric:.4f}" if isinstance(metric, float) else ""))
+    out.append("")
+    return out
+
+
+def render_stage_breakdown(trace_events) -> list[str]:
+    """Aggregate complete ("ph": "X") spans by name: where the host
+    wall-clock went."""
+    agg: dict[str, list[float]] = {}
+    for ev in trace_events:
+        if ev.get("ph") != "X":
+            continue
+        agg.setdefault(ev["name"], []).append(float(ev.get("dur", 0.0)))
+    if not agg:
+        return []
+    out = ["## Per-stage time breakdown", "",
+           "| stage | calls | total ms | mean us |",
+           "|:--|---:|---:|---:|"]
+    for name, durs in sorted(agg.items(), key=lambda kv: -sum(kv[1])):
+        total_us = sum(durs)
+        out.append(f"| {name} | {len(durs)} | {total_us / 1e3:.2f} "
+                   f"| {total_us / len(durs):.1f} |")
+    out.append("")
+    return out
+
+
+def render_clients(events) -> list[str]:
+    """Per-client table from the flushed counters record."""
+    counters = (_last(events, "counters") or {}).get("counters", {})
+    per_client: dict[str, dict[str, float]] = {}
+    for name, v in counters.items():
+        parts = name.split("/")
+        if len(parts) == 3 and parts[0] == "client":
+            per_client.setdefault(parts[1], {})[parts[2]] = v
+    if not per_client:
+        return []
+    cols = sorted({c for fields in per_client.values() for c in fields})
+    out = ["## Per-client activity", "",
+           "| client | " + " | ".join(cols) + " |",
+           "|---:|" + "---:|" * len(cols)]
+    for cid in sorted(per_client, key=lambda c: int(c) if c.isdigit() else 0):
+        fields = per_client[cid]
+        cells = []
+        for c in cols:
+            v = fields.get(c, 0)
+            cells.append(f"{v:.3f}" if isinstance(v, float)
+                         and not float(v).is_integer() else f"{int(v)}")
+        out.append(f"| {cid} | " + " | ".join(cells) + " |")
+    out.append("")
+    return out
+
+
+def render_report(run_dir: pathlib.Path) -> str:
+    trace_events, events = load_run(run_dir)
+    summary = _last(events, "run_summary") or {}
+    lines = [f"# Flight-recorder report: {run_dir}", ""]
+    lines += render_summary(summary)
+    for key, title in (("staleness_hist", "Staleness distribution"),
+                       ("up_bytes_hist", "Up frame bytes"),
+                       ("down_bytes_hist", "Down frame bytes")):
+        if summary.get(key):
+            lines += render_hist(summary[key], title)
+    metrics = summary.get("metrics") or {}
+    for key, title in (("up_nnz_hist", "Up message nnz"),
+                       ("down_nnz_hist", "Down message nnz"),
+                       ("update_mag_hist", "Update magnitude |G|^2")):
+        if metrics.get(key):
+            lines += render_hist(metrics[key], title)
+    lines += render_bytes_vs_loss(events)
+    lines += render_stage_breakdown(trace_events)
+    lines += render_clients(events)
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("run_dir", type=pathlib.Path,
+                    help="directory holding trace.json + events.jsonl")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write the markdown here instead of stdout")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: exit nonzero unless artifacts parse and "
+                         "the staleness + bytes sections rendered")
+    args = ap.parse_args(argv)
+
+    try:
+        report = render_report(args.run_dir)
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"report: cannot load {args.run_dir}: {exc}", file=sys.stderr)
+        return 1
+
+    if args.out:
+        args.out.write_text(report + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(report)
+
+    if args.check:
+        missing = [title for title in
+                   ("Staleness distribution", "Up frame bytes",
+                    "Down frame bytes")
+                   if f"### {title}" not in report]
+        if missing:
+            print(f"report --check: missing sections: {missing}",
+                  file=sys.stderr)
+            return 1
+        print("report --check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
+from repro import telemetry
 from repro.core import async_sim
 from repro.core.baselines import Strategy
 from repro.core.paramspace import ParamSpace
@@ -45,9 +46,18 @@ class ClusterClient:
     event_fn: Callable | None = None
     reply_timeout: float | None = None   # retransmit interval under drops
     max_retries: int = 50
+    recorder: Any = None                 # telemetry.Recorder (None = no-op)
+
+    def __post_init__(self):
+        if self.recorder is None:
+            self.recorder = telemetry.NULL
+        # retransmits this client issued after a reply timed out — the
+        # observable half of the fault injector's drop accounting
+        self.retries = 0
 
     def run(self):
         """HELLO -> (UP/DOWN | SKIP)* -> BYE; returns local History-lite."""
+        rec = self.recorder
         addr = self.plan.client_id
         space = ParamSpace.from_tree(self.params0)
         client_step = async_sim.make_client_step(self.strategy, self.grad_fn,
@@ -75,12 +85,16 @@ class ClusterClient:
             e = step if self.event_fn is None else int(self.event_fn(step))
             lr = self.lr if self.lr_fn is None else float(self.lr_fn(e))
             batch = self.batch_fn(e, slot)
-            strat, loss, msg = client_step(theta, strat, batch, lr)
-            payload, _ = wire.encode_message(
-                wire.UP, addr, seq, [msg], mode=up_mode, seg=up_seg,
-                aux=float(loss))
-            down = self._exchange(payload, seq)
-            theta = apply_G(theta, down.leaves[0])
+            with rec.span("client/step", cat=f"client/{addr}"):
+                strat, loss, msg = client_step(theta, strat, batch, lr)
+            with rec.span("client/encode", cat=f"client/{addr}"):
+                payload, _ = wire.encode_message(
+                    wire.UP, addr, seq, [msg], mode=up_mode, seg=up_seg,
+                    aux=float(loss))
+            with rec.span("client/exchange", cat=f"client/{addr}"):
+                down = self._exchange(payload, seq)
+            with rec.span("client/apply", cat=f"client/{addr}"):
+                theta = apply_G(theta, down.leaves[0])
             losses.append(float(loss))
             seq += 1
         bye, _ = wire.encode_message(wire.BYE, addr, seq)
@@ -100,6 +114,9 @@ class ClusterClient:
             try:
                 _, reply = self.transport.recv(timeout=self.reply_timeout)
             except RecvTimeout:
+                self.retries += 1
+                self.recorder.count(
+                    f"client/{self.plan.client_id}/retries")
                 self.transport.send(wire.COORDINATOR_ID, payload)
                 continue
             down = wire.decode_message(reply)

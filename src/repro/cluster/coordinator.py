@@ -35,9 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import async_sim, engine as engine_lib
 from repro.core import server as ps
 from repro.core.engine import CompressionSpec
+from repro.telemetry import metrics as metrics_lib
 
 from . import wire
 from .transport import RecvTimeout
@@ -62,8 +64,11 @@ class Coordinator:
     # exposing ``next_batch`` (ScheduleDriven) batch; the batched stages
     # are bit-equal to the serial ones, so this is purely a perf knob.
     max_batch: int | None = None
+    recorder: Any = None               # telemetry.Recorder (None = no-op)
 
     def __post_init__(self):
+        if self.recorder is None:
+            self.recorder = telemetry.NULL
         self.sstate = ps.init(self.params0, self.n_slots)
         self._batched_server = async_sim.make_batched_server_step(
             self.secondary_density, self.secondary_spec)
@@ -86,6 +91,15 @@ class Coordinator:
         self._last_sync: dict[int, int] = {}
         self.up_bytes = 0
         self.down_bytes = 0
+        # flight-recorder accounting: message-kind + per-client counters
+        # and per-event frame sizes for the run-report histograms.  All
+        # host-side ints — nothing here touches the jitted server stages.
+        self.counters: dict[str, float] = {}
+        self._up_sizes: list[int] = []
+        self._down_sizes: list[int] = []
+
+    def _count(self, name: str, n: float = 1):
+        self.counters[name] = self.counters.get(name, 0) + n
 
     # -- membership --------------------------------------------------------
 
@@ -128,33 +142,42 @@ class Coordinator:
         except Exception:
             if self.scheduler is not None:
                 raise   # trusted in-process peers: corruption is a bug
+            self._count("ignored")
             return "ignored", None  # TCP: drop the bad frame, keep serving
         if msg.type == wire.HELLO:
             slot = self._attach(src, msg.seq)
             reply, _ = wire.encode_message(
                 wire.WELCOME, wire.COORDINATOR_ID, slot)
             self.transport.send(src, reply)
+            self._count("hello")
             return "hello", msg
         if msg.type == wire.SKIP:
             self._account(src, 0)
+            self._count("skip")
             return "skip", msg
         if msg.type == wire.BYE:
             self._detach(src)
+            self._count("bye")
             return "bye", msg
         if msg.type != wire.UP:
             raise ValueError(f"unexpected {wire.TYPE_NAMES[msg.type]}")
         if len(msg.leaves) != 1:
             # the arena protocol ships exactly ONE frame per UP message
+            self._count("ignored")
             return "ignored", None
         if src not in self._slot_of:
             # UP without a completed HELLO (restarted or foreign peer):
             # reject the frame, not the whole run
+            self._count("ignored")
             return "ignored", None
         if msg.seq <= self._last_seq.get(src, -1):
             # duplicate after a dropped reply: answer from cache, do NOT
             # re-apply the gradient (at-least-once -> exactly-once)
+            self._count("dup")
+            self._count(f"client/{src}/dups")
             cached = self._reply_cache.get(src)
             if cached is not None:
+                self._count("reply_cache_hits")
                 self.transport.send(src, cached)
             return "dup", None
         return "up", msg
@@ -170,44 +193,59 @@ class Coordinator:
         (``async_sim.run_batched``'s contract).  Replies are sent AFTER
         the batch commits, in schedule order.
         """
+        rec = self.recorder
         slots = [self._slot_of[src] for src, _, _ in ups]
         for (src, payload, msg), slot in zip(ups, slots):
             self.up_bytes += len(payload)
+            self._up_sizes.append(len(payload))
+            self._count(f"client/{src}/events")
+            self._count(f"client/{src}/up_bytes", len(payload))
             e = len(self._losses)
             self._losses.append(float(np.float32(msg.aux)))
             self._served_slots.append(slot)
             self._staleness.append(e - self._last_sync.get(slot, 0))
             self._last_sync[slot] = e + 1
 
-        ids = jnp.asarray(slots, jnp.int32)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[m.leaves[0] for _, _, m in ups])
-        self.sstate, G_stack, M_rows = self._batched_server(
-            self.sstate, stacked, ids)
+        with rec.span("coord/server_batch", batch=len(ups)):
+            ids = jnp.asarray(slots, jnp.int32)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[m.leaves[0] for _, _, m in ups])
+            self.sstate, G_stack, M_rows = self._batched_server(
+                self.sstate, stacked, ids)
 
-        replies, shipped = [], []
-        for i, (src, payload, msg) in enumerate(ups):
-            G_i = jax.tree.map(lambda x: x[i], G_stack)
-            reply, ship = wire.encode_message(
-                wire.DOWN, wire.COORDINATOR_ID, msg.seq, [G_i],
-                mode=self._down_mode, seg=self._down_seg)
-            replies.append(reply)
-            shipped.append(ship[0])
+        with rec.span("coord/encode", batch=len(ups)):
+            replies, shipped = [], []
+            for i, (src, payload, msg) in enumerate(ups):
+                G_i = jax.tree.map(lambda x: x[i], G_stack)
+                reply, ship = wire.encode_message(
+                    wire.DOWN, wire.COORDINATOR_ID, msg.seq, [G_i],
+                    mode=self._down_mode, seg=self._down_seg)
+                replies.append(reply)
+                shipped.append(ship[0])
 
-        if self._down_seg is not None:
-            G_ship = jax.tree.map(lambda *xs: jnp.stack(xs), *shipped)
-            self.sstate = self._commit_rows(self.sstate, ids, G_ship)
-        else:
-            # dense downward: v rows snap to the per-event prefix M
-            self.sstate, _ = self._commit_rows(
-                self.sstate, ids, G_stack, M_rows)
+        with rec.span("coord/commit", batch=len(ups)):
+            if self._down_seg is not None:
+                G_ship = jax.tree.map(lambda *xs: jnp.stack(xs), *shipped)
+                self.sstate = self._commit_rows(self.sstate, ids, G_ship)
+            else:
+                # dense downward: v rows snap to the per-event prefix M
+                self.sstate, _ = self._commit_rows(
+                    self.sstate, ids, G_stack, M_rows)
 
-        for (src, payload, msg), reply in zip(ups, replies):
-            self.down_bytes += len(reply)
-            self._last_seq[src] = msg.seq
-            self._reply_cache[src] = reply
-            self.transport.send(src, reply)
-            self._account(src, len(payload) + len(reply))
+        with rec.span("coord/reply", batch=len(ups)):
+            for (src, payload, msg), reply in zip(ups, replies):
+                self.down_bytes += len(reply)
+                self._down_sizes.append(len(reply))
+                self._count(f"client/{src}/down_bytes", len(reply))
+                self._last_seq[src] = msg.seq
+                self._reply_cache[src] = reply
+                self.transport.send(src, reply)
+                self._account(src, len(payload) + len(reply))
+
+        if rec.enabled:
+            rec.event("progress", event=len(self._losses),
+                      batch=len(ups), loss=self._losses[-1],
+                      up_bytes=self.up_bytes, down_bytes=self.down_bytes)
 
     def _account(self, client: int, nbytes: int):
         if self.scheduler is None:
@@ -215,6 +253,7 @@ class Coordinator:
         cost = 0.0
         if self.virtual_costs and client in self.virtual_costs and nbytes:
             cost = self.virtual_costs[client].frame_cost(nbytes)
+            self._count(f"client/{client}/virtual_cost", cost)
         self.scheduler.account(client, cost)
 
     # -- the loop ----------------------------------------------------------
@@ -292,12 +331,32 @@ class Coordinator:
 
     def _finish(self):
         final = ps.global_model(self.params0, self.sstate)
+        staleness = np.asarray(self._staleness, np.int64)
+        metrics = {
+            "n_events": len(self._losses),
+            "per_worker": np.bincount(
+                np.asarray(self._served_slots, np.int64),
+                minlength=self.sstate.v.shape[0]).tolist(),
+            "staleness_hist": metrics_lib.summarize_log2(staleness),
+            "up_bytes_hist": metrics_lib.summarize_log2(self._up_sizes),
+            "down_bytes_hist": metrics_lib.summarize_log2(self._down_sizes),
+            "counters": dict(self.counters),
+        }
         hist = async_sim.History(
             losses=np.asarray(self._losses, np.float64),
             worker_ids=np.asarray(self._served_slots, np.int32),
-            staleness=np.asarray(self._staleness, np.int64),
+            staleness=staleness,
             up_bytes=self.up_bytes,
             down_bytes=self.down_bytes,
             evals=[],
+            metrics=metrics,
         )
+        rec = self.recorder
+        if rec.enabled:
+            for name, n in self.counters.items():
+                rec.count(name, n)
+            async_sim._record_run_summary(
+                rec, "cluster", hist, None, None,
+                np.asarray(self._up_sizes, np.int64),
+                np.asarray(self._down_sizes, np.int64))
         return final, hist

@@ -42,6 +42,7 @@ def run_inprocess(
     secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC,
     inject_faults: bool = False,
     timeout: float = 300.0,
+    recorder=None,
 ):
     """Run coordinator + clients on the in-process transport.
 
@@ -86,15 +87,17 @@ def run_inprocess(
         scheduler=scheduler,
         virtual_costs=virtual_costs,
         recv_timeout=timeout,
+        recorder=recorder,
     )
 
-    clients, threads, errors = [], [], []
+    clients, threads, errors, injectors = [], [], [], {}
     for p in plans:
         endpoint = hub.endpoint(p.client_id)
         if inject_faults:
             endpoint = FaultInjector(
                 endpoint, p.fault_policy(realtime=False),
                 droppable=lambda payload: payload[:1] == bytes([wire.UP]))
+            injectors[p.client_id] = endpoint
         c = ClusterClient(
             transport=endpoint,
             strategy=strategy,
@@ -108,6 +111,7 @@ def run_inprocess(
                 (lambda step, ev=events_of[p.client_id]: ev[step])
                 if events_of is not None else None),
             reply_timeout=1.0 if inject_faults else None,
+            recorder=recorder,
         )
         clients.append(c)
 
@@ -131,4 +135,14 @@ def run_inprocess(
         t.join(timeout=timeout)
     if errors:
         raise errors[0]
+    # fold the clients' fault accounting into the coordinator's metrics:
+    # injected drops (from each FaultInjector) vs observed retransmits
+    # (from each client) — what test_cluster's accounting test reconciles
+    if hist.metrics is not None:
+        per_client = {c.plan.client_id: {
+            "retries": c.retries,
+            "drops": getattr(injectors.get(c.plan.client_id), "dropped", 0),
+        } for c in clients}
+        hist = hist._replace(
+            metrics={**hist.metrics, "clients": per_client})
     return final, hist

@@ -102,6 +102,44 @@ class History(NamedTuple):
     up_bytes: int               # total upward wire bytes
     down_bytes: int             # total downward wire bytes
     evals: list                 # [(event_idx, metric), ...]
+    # drained flight-recorder metrics (repro.telemetry) when the run was
+    # told to collect them; None otherwise — the data plane is identical
+    # either way (test_metrics_do_not_change_bits)
+    metrics: dict | None = None
+
+
+def _jsonable(x):
+    """Best-effort scalarization of an eval metric for the JSONL log."""
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return str(x)
+
+
+def _record_run_summary(rec, runner: str, hist: History,
+                        up_cost, down_cost, per_up, per_down) -> None:
+    """Emit the end-of-run JSONL summary the report renderer consumes:
+    staleness + per-event wire-byte histograms (host data only — the run
+    is over, so this syncs nothing)."""
+    if not rec.enabled:
+        return
+    from repro.telemetry import metrics as metrics_lib
+
+    n = len(hist.losses)
+    if per_up is None:
+        per_up = np.full(n, up_cost if up_cost is not None else 0)
+    if per_down is None:
+        per_down = np.full(n, down_cost if down_cost is not None else 0)
+    rec.event(
+        "run_summary", runner=runner, n_events=n,
+        up_bytes=int(hist.up_bytes), down_bytes=int(hist.down_bytes),
+        loss_first=float(hist.losses[0]) if n else None,
+        loss_last=float(hist.losses[-1]) if n else None,
+        staleness_hist=metrics_lib.summarize_log2(hist.staleness),
+        up_bytes_hist=metrics_lib.summarize_log2(per_up),
+        down_bytes_hist=metrics_lib.summarize_log2(per_down),
+        metrics=hist.metrics,
+    )
 
 
 def staleness_of(schedule, n_workers: int) -> np.ndarray:
@@ -419,6 +457,17 @@ class AsyncTrainer:
             self._batched_cache = cached = (space, stages)
         return cached[1]
 
+    def _metrics_step(self):
+        """The jitted telemetry fold (repro.telemetry.metrics), memoized
+        like the stages.  It is a SEPARATE executable that only reads
+        stage outputs, so enabling metrics never changes the data-plane
+        compilations (the bit-for-bit invariant)."""
+        cached = getattr(self, "_metrics_cache", None)
+        if cached is None:
+            from repro.telemetry import metrics as metrics_lib
+            self._metrics_cache = cached = metrics_lib.make_metrics_step()
+        return cached
+
     def init(self, params0):
         space = ParamSpace.from_tree(params0)
         theta0 = space.pack(params0)
@@ -440,10 +489,22 @@ class AsyncTrainer:
         lr_fn: Callable[[int], float] | None = None,
         eval_fn: Callable | None = None,
         eval_every: int = 0,
+        recorder=None,
+        metrics: bool = False,
     ):
-        """Run the full schedule.  batch_fn(event_idx, worker_id) -> batch."""
-        from repro.cluster import wire  # codec quantizer + byte accounting
+        """Run the full schedule.  batch_fn(event_idx, worker_id) -> batch.
 
+        ``recorder`` (a :class:`repro.telemetry.Recorder`) traces per-event
+        host spans + run events; ``metrics=True`` folds every event into an
+        on-device :class:`~repro.telemetry.metrics.MetricsState` (drained
+        into ``History.metrics`` at the end).  Both default OFF, leaving
+        this loop byte-identical to the untelemetered path.
+        """
+        from repro.cluster import wire  # codec quantizer + byte accounting
+        from repro import telemetry
+        from repro.telemetry import metrics as metrics_lib
+
+        rec = recorder if recorder is not None else telemetry.NULL
         space = ParamSpace.from_tree(params0)
         sstate, workers = self.init(params0)
         client_step, server_step, commit, apply_G = \
@@ -469,19 +530,32 @@ class AsyncTrainer:
         down_nnz: list = []     # dense down messages: data-dependent nnz
         up_bytes = down_bytes = 0
         evals = []
+        stal = staleness_of(schedule, self.n_workers)  # host precomputed
+        ms = metrics_lib.init(self.n_workers) if metrics else None
+        mstep = self._metrics_step() if metrics else None
         for e, k in enumerate(schedule):
             k = int(k)
             lr = self.lr if lr_fn is None else float(lr_fn(e))
-            batch = batch_fn(e, k)
-            wst, loss, msg = client_step(
-                workers[k]["theta"], workers[k]["strat"], batch, lr)
-            msg = wire.quantize_message(msg, up_mode, seg=up_seg)
-            sstate, G = server_step(sstate, msg, jnp.int32(k))
-            G = wire.quantize_message(G, down_mode, seg=down_seg)
-            sstate = commit(sstate, jnp.int32(k), G)
-            workers[k]["theta"] = apply_G(workers[k]["theta"], G)
+            with rec.span("sim/batch_build", worker=k):
+                batch = batch_fn(e, k)
+            with rec.span("sim/client_step", worker=k):
+                wst, loss, msg = client_step(
+                    workers[k]["theta"], workers[k]["strat"], batch, lr)
+            with rec.span("sim/wire_quantize"):
+                msg = wire.quantize_message(msg, up_mode, seg=up_seg)
+            with rec.span("sim/server_step"):
+                sstate, G = server_step(sstate, msg, jnp.int32(k))
+                G = wire.quantize_message(G, down_mode, seg=down_seg)
+            with rec.span("sim/commit"):
+                sstate = commit(sstate, jnp.int32(k), G)
+            with rec.span("sim/apply"):
+                workers[k]["theta"] = apply_G(workers[k]["theta"], G)
             workers[k]["strat"] = wst
             losses.append(loss)
+            if ms is not None:
+                # one extra dispatch reading the SHIPPED messages; device
+                # scalars only — no host sync in the loop
+                ms = mstep(ms, np.int32(k), np.int32(stal[e]), msg, G)
             if up_cost is not None:
                 up_bytes += up_cost
             else:
@@ -491,27 +565,34 @@ class AsyncTrainer:
             else:
                 down_nnz.append(jnp.count_nonzero(G))
             if eval_fn is not None and eval_every and (e + 1) % eval_every == 0:
-                model = ps.global_model(params0, sstate)
-                evals.append((e + 1, eval_fn(model)))
+                with rec.span("sim/eval", event=e + 1):
+                    model = ps.global_model(params0, sstate)
+                    evals.append((e + 1, eval_fn(model)))
+                # eval boundary = the sanctioned drain point
+                rec.event("eval", event=e + 1, metric=_jsonable(evals[-1][1]),
+                          **({"metrics": metrics_lib.drain(ms)}
+                             if ms is not None else {}))
         final = ps.global_model(params0, sstate)
+        per_up = per_down = None
         if up_nnz:
-            up_bytes += int(np.sum(
-                wire.ENVELOPE_BYTES
-                + wire.dense_frame_bytes(np.asarray(jnp.stack(up_nnz)),
-                                         space.total)))
+            per_up = (wire.ENVELOPE_BYTES + wire.dense_frame_bytes(
+                np.asarray(jnp.stack(up_nnz)), space.total))
+            up_bytes += int(np.sum(per_up))
         if down_nnz:
-            down_bytes += int(np.sum(
-                wire.ENVELOPE_BYTES
-                + wire.dense_frame_bytes(np.asarray(jnp.stack(down_nnz)),
-                                         space.total)))
+            per_down = (wire.ENVELOPE_BYTES + wire.dense_frame_bytes(
+                np.asarray(jnp.stack(down_nnz)), space.total))
+            down_bytes += int(np.sum(per_down))
         hist = History(
             losses=np.asarray(jnp.stack(losses), np.float64),
             worker_ids=np.asarray(schedule),
-            staleness=staleness_of(schedule, self.n_workers),
+            staleness=stal,
             up_bytes=up_bytes,
             down_bytes=down_bytes,
             evals=evals,
+            metrics=metrics_lib.drain(ms) if ms is not None else None,
         )
+        _record_run_summary(rec, "serial", hist, up_cost, down_cost,
+                            per_up, per_down)
         return final, sstate, hist
 
     def run_batched(
@@ -524,6 +605,8 @@ class AsyncTrainer:
         eval_fn: Callable | None = None,
         eval_every: int = 0,
         max_batch: int | None = None,
+        recorder=None,
+        metrics: bool = False,
     ):
         """Batched event loop — bit-for-bit equal to :meth:`run`.
 
@@ -535,9 +618,16 @@ class AsyncTrainer:
         and every stage donates its state, so the whole fleet updates in
         place.  Losses, final params, and byte accounting match the serial
         loop exactly on the same schedule (tests/test_async_sim.py).
+
+        ``recorder``/``metrics`` mirror :meth:`run`: host spans per batch,
+        one on-device metrics fold per batch (whole-batch lanes in one
+        dispatch), zero host syncs, no data-plane change.
         """
         from repro.cluster import wire
+        from repro import telemetry
+        from repro.telemetry import metrics as metrics_lib
 
+        rec = recorder if recorder is not None else telemetry.NULL
         space = ParamSpace.from_tree(params0)
         sstate = ps.init(params0, self.n_workers)
         theta0 = space.pack(params0)
@@ -562,6 +652,9 @@ class AsyncTrainer:
 
         batches = batch_schedule(schedule, max_batch=max_batch,
                                  cut_every=eval_every or None)
+        stal = staleness_of(schedule, self.n_workers)
+        ms = metrics_lib.init(self.n_workers) if metrics else None
+        mstep = self._metrics_step() if metrics else None
         losses, up_nnz, down_nnz, evals = [], [], [], []
         e = 0
         for ids_np in batches:
@@ -572,51 +665,67 @@ class AsyncTrainer:
             lrs = np.asarray(
                 [self.lr if lr_fn is None else float(lr_fn(e + i))
                  for i in range(b)], np.float32)
-            data = [batch_fn(e + i, int(k)) for i, k in enumerate(ids_np)]
-            data = jax.tree.map(lambda *xs: jnp.stack(xs), *data)
-            ws, batch_losses, msgs, nnz_up = client(wp, ws, ids, data, lrs)
-            if q_up is not None:
-                msgs = q_up(msgs)
-            sstate, G, M_rows = server(sstate, msgs, ids)
-            if dense_down:
-                sstate, nnz_dn = commit(sstate, ids, G, M_rows)
-                down_nnz.append(nnz_dn)
-            else:
-                if q_down is not None:
-                    G = q_down(G)
-                sstate = commit(sstate, ids, G)
-            wp = apply_rows(wp, ids, G)
+            with rec.span("batched/batch_build", size=b):
+                data = [batch_fn(e + i, int(k)) for i, k in enumerate(ids_np)]
+                data = jax.tree.map(lambda *xs: jnp.stack(xs), *data)
+            with rec.span("batched/client", size=b):
+                ws, batch_losses, msgs, nnz_up = client(wp, ws, ids, data,
+                                                        lrs)
+                if q_up is not None:
+                    msgs = q_up(msgs)
+            with rec.span("batched/server", size=b):
+                sstate, G, M_rows = server(sstate, msgs, ids)
+            with rec.span("batched/commit", size=b):
+                if dense_down:
+                    sstate, nnz_dn = commit(sstate, ids, G, M_rows)
+                    down_nnz.append(nnz_dn)
+                else:
+                    if q_down is not None:
+                        G = q_down(G)
+                    sstate = commit(sstate, ids, G)
+            with rec.span("batched/apply", size=b):
+                wp = apply_rows(wp, ids, G)
             losses.append(batch_losses)
+            if ms is not None:
+                # whole batch folded in one dispatch; staleness is the
+                # host-precomputed schedule function — still no syncs
+                ms = mstep(ms, ids, stal[e:e + b].astype(np.int32), msgs, G)
             if up_cost is None:
                 up_nnz.append(nnz_up)
             e += b
             if eval_fn is not None and eval_every and e % eval_every == 0:
-                model = ps.global_model(params0, sstate)
-                evals.append((e, eval_fn(model)))
+                with rec.span("batched/eval", event=e):
+                    model = ps.global_model(params0, sstate)
+                    evals.append((e, eval_fn(model)))
+                rec.event("eval", event=e, metric=_jsonable(evals[-1][1]),
+                          **({"metrics": metrics_lib.drain(ms)}
+                             if ms is not None else {}))
         final = ps.global_model(params0, sstate)
         n_events = len(schedule)
+        per_up = per_down = None
         if up_cost is not None:
             up_bytes = up_cost * n_events
         else:
-            up_bytes = int(np.sum(
-                wire.ENVELOPE_BYTES
-                + wire.dense_frame_bytes(
-                    np.asarray(jnp.concatenate(up_nnz)), space.total)))
+            per_up = (wire.ENVELOPE_BYTES + wire.dense_frame_bytes(
+                np.asarray(jnp.concatenate(up_nnz)), space.total))
+            up_bytes = int(np.sum(per_up))
         if down_cost is not None:
             down_bytes = down_cost * n_events
         else:
-            down_bytes = int(np.sum(
-                wire.ENVELOPE_BYTES
-                + wire.dense_frame_bytes(
-                    np.asarray(jnp.concatenate(down_nnz)), space.total)))
+            per_down = (wire.ENVELOPE_BYTES + wire.dense_frame_bytes(
+                np.asarray(jnp.concatenate(down_nnz)), space.total))
+            down_bytes = int(np.sum(per_down))
         hist = History(
             losses=np.asarray(jnp.concatenate(losses), np.float64),
             worker_ids=np.asarray(schedule),
-            staleness=staleness_of(schedule, self.n_workers),
+            staleness=stal,
             up_bytes=up_bytes,
             down_bytes=down_bytes,
             evals=evals,
+            metrics=metrics_lib.drain(ms) if ms is not None else None,
         )
+        _record_run_summary(rec, "batched", hist, up_cost, down_cost,
+                            per_up, per_down)
         return final, sstate, hist
 
 

@@ -51,6 +51,8 @@ def run_async_scan(
     lr: float,
     secondary_density: float | None = None,
     secondary_spec: CompressionSpec = engine_lib.EXACT_SPEC,
+    recorder=None,
+    metrics: bool = False,
 ):
     """Run the whole schedule in one jitted scan.
 
@@ -58,9 +60,19 @@ def run_async_scan(
     batches:  pytree stacked on a leading n_events axis.
     Returns (final global model, History) — the History carries the same
     losses/staleness/byte totals as ``AsyncTrainer.run``.
+
+    ``metrics=True`` threads a ``telemetry.MetricsState`` through the scan
+    carry as an optional extra leg (DESIGN.md §11): the fold reads only
+    the optimization-barrier-staged stage outputs, so the data-plane op
+    sequence — and therefore every loss/param/byte bit — is unchanged.
+    With it off, the compiled program is literally the pre-telemetry one.
+    ``recorder`` traces the two host phases (build+compile, execute).
     """
     from repro.cluster import wire  # codec quantizer + byte accounting
+    from repro import telemetry
+    from repro.telemetry import metrics as metrics_lib
 
+    rec = recorder if recorder is not None else telemetry.NULL
     space = ParamSpace.from_tree(params0)
     up_mode = strategy.quantize
     down_mode = secondary_spec.quantize
@@ -108,8 +120,10 @@ def run_async_scan(
         return jnp.zeros_like(x).at[idx].add(x)
 
     def event(carry, xs):
-        sstate, wp, ws = carry
-        k, batch = xs
+        if metrics:
+            (sstate, wp, ws, ms), (k, stal, batch) = carry, xs
+        else:
+            (sstate, wp, ws), (k, batch) = carry, xs
         theta_k = stage(wp[k])
         strat_k = jax.tree.map(lambda x: stage(x[k]), ws)
         strat_k, loss, msg = client_step(theta_k, strat_k, stage(batch), lr)
@@ -124,21 +138,50 @@ def run_async_scan(
         theta_k = stage(ps.apply_update(theta_k, G))
         wp = wp.at[k].set(theta_k)
         ws = jax.tree.map(lambda x, v: x.at[k].set(v), ws, strat_k)
+        if metrics:
+            # fold the flight-recorder metrics from the ALREADY-staged
+            # values — read-only taps, nothing flows back into the data
+            # plane, so the staged op sequence (and its bits) is unchanged
+            ms = metrics_lib.update(ms, k, stal,
+                                    metrics_lib.msg_nnz(msg),
+                                    metrics_lib.msg_nnz(G),
+                                    metrics_lib.msg_sqnorm(G))
+            return (sstate, wp, ws, ms), (loss, dense_nnz(msg),
+                                          dense_nnz(G))
         return (sstate, wp, ws), (loss, dense_nnz(msg), dense_nnz(G))
+
+    stal_np = async_sim.staleness_of(schedule, n_workers)
 
     # ``sstate0`` is built fresh above and returned updated, so its arenas
     # (M and the fleet-sized v buffer) alias the output in place.  wp0/ws0
     # are scan-carry-only (never returned), so donating them could not
     # alias anything — XLA double-buffers scan carries internally.
-    @partial(jax.jit, donate_argnums=(0,))
-    def run(sstate0, wp0, ws0, schedule, batches):
-        (sstate, _, _), out = jax.lax.scan(
-            event, (sstate0, wp0, ws0),
-            (jnp.asarray(schedule, jnp.int32), batches))
-        return sstate, out
+    if metrics:
+        @partial(jax.jit, donate_argnums=(0,))
+        def run(sstate0, wp0, ws0, schedule, batches, ms0, stal):
+            (sstate, _, _, ms), out = jax.lax.scan(
+                event, (sstate0, wp0, ws0, ms0),
+                (jnp.asarray(schedule, jnp.int32),
+                 jnp.asarray(stal, jnp.int32), batches))
+            return sstate, out, ms
 
-    sstate, (losses, up_nnz, down_nnz) = run(
-        sstate0, wp0, ws0, schedule, batches)
+        with rec.span("scan/build_and_compile"):
+            ms0 = metrics_lib.init(n_workers)
+        with rec.span("scan/execute"):
+            sstate, (losses, up_nnz, down_nnz), ms = run(
+                sstate0, wp0, ws0, schedule, batches, ms0, stal_np)
+    else:
+        @partial(jax.jit, donate_argnums=(0,))
+        def run(sstate0, wp0, ws0, schedule, batches):
+            (sstate, _, _), out = jax.lax.scan(
+                event, (sstate0, wp0, ws0),
+                (jnp.asarray(schedule, jnp.int32), batches))
+            return sstate, out
+
+        ms = None
+        with rec.span("scan/execute"):
+            sstate, (losses, up_nnz, down_nnz) = run(
+                sstate0, wp0, ws0, schedule, batches)
 
     n_events = len(schedule)
     env = wire.ENVELOPE_BYTES
@@ -153,9 +196,23 @@ def run_async_scan(
     hist = async_sim.History(
         losses=np.asarray(losses, np.float64),
         worker_ids=np.asarray(schedule),
-        staleness=async_sim.staleness_of(schedule, n_workers),
+        staleness=stal_np,
         up_bytes=total_bytes(up_seg, up_mode, up_nnz),
         down_bytes=total_bytes(down_seg, down_mode, down_nnz),
         evals=[],
+        metrics=metrics_lib.drain(ms) if ms is not None else None,
     )
+    if rec.enabled:
+        def per_event(seg, mode, nnz):
+            if seg is not None:
+                return np.full(n_events,
+                               wire.frame_bytes_static(seg, space.total,
+                                                       mode))
+            return env + wire.dense_frame_bytes(
+                np.asarray(nnz, dtype=np.int64), space.total)
+
+        async_sim._record_run_summary(
+            rec, "scan", hist, None, None,
+            per_event(up_seg, up_mode, up_nnz),
+            per_event(down_seg, down_mode, down_nnz))
     return ps.global_model(params0, sstate), hist

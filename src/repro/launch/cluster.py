@@ -26,9 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import make_strategy
 from repro.core.engine import CompressionSpec
 from repro.data.synthetic import ClassificationTask
+
+log = telemetry.get_logger("cluster")
 
 
 def _problem(args):
@@ -117,9 +120,13 @@ def run_coordinator(args, *, spawn_clients: bool):
     from repro.cluster.transport import TcpCoordinatorTransport
 
     params0, grad_fn, _, accuracy = _problem(args)
+    recorder = (telemetry.Recorder(args.trace_dir)
+                if args.trace_dir else telemetry.NULL)
+    if recorder.enabled:
+        telemetry.set_recorder(recorder)
     transport = TcpCoordinatorTransport(args.host, args.port)
-    print(f"[coordinator] listening on {transport.host}:{transport.port} "
-          f"({args.clients} clients x {args.rounds} rounds)")
+    log.info(f"[coordinator] listening on {transport.host}:{transport.port} "
+             f"({args.clients} clients x {args.rounds} rounds)")
     procs = []
     if spawn_clients:
         for c in range(args.clients):
@@ -136,10 +143,12 @@ def run_coordinator(args, *, spawn_clients: bool):
         secondary_density=args.secondary_density,
         secondary_spec=spec,
         recv_timeout=args.timeout,
+        recorder=recorder,
     )
     t0 = time.perf_counter()
     try:
-        final, hist = coordinator.serve()
+        with recorder.span("cluster/serve"):
+            final, hist = coordinator.serve()
         dt = time.perf_counter() - t0
     finally:
         # on any serve() failure, still reap the children + free the port
@@ -151,19 +160,23 @@ def run_coordinator(args, *, spawn_clients: bool):
         transport.close()
 
     n = max(1, len(hist.losses))
-    print(f"[coordinator] {len(hist.losses)} events in {dt:.1f}s | "
-          f"loss {hist.losses[:3].mean():.4f} -> {hist.losses[-3:].mean():.4f}"
-          f" | acc {accuracy(final):.3f}")
-    print(f"[coordinator] measured wire bytes: up={hist.up_bytes} "
-          f"({hist.up_bytes / n:.0f}/event) down={hist.down_bytes} "
-          f"({hist.down_bytes / n:.0f}/event)")
+    log.info(f"[coordinator] {len(hist.losses)} events in {dt:.1f}s | "
+             f"loss {hist.losses[:3].mean():.4f} -> "
+             f"{hist.losses[-3:].mean():.4f} | acc {accuracy(final):.3f}")
+    log.info(f"[coordinator] measured wire bytes: up={hist.up_bytes} "
+             f"({hist.up_bytes / n:.0f}/event) down={hist.down_bytes} "
+             f"({hist.down_bytes / n:.0f}/event)")
+    if recorder.enabled:
+        telemetry.set_recorder(None)
+        paths = recorder.close()
+        log.info(f"[coordinator] telemetry: {' '.join(paths)}")
     if args.smoke:
         assert len(hist.losses) == args.clients * args.rounds, \
             "smoke: missing events"
         assert hist.losses[-3:].mean() < hist.losses[:3].mean(), \
             "smoke: loss did not decrease"
         assert hist.up_bytes > 0 and hist.down_bytes > 0
-        print("[coordinator] smoke OK")
+        log.info("[coordinator] smoke OK")
     return 0
 
 
@@ -208,7 +221,19 @@ def main(argv=None):
     p.add_argument("--hidden", type=int, default=32)
     p.add_argument("--batch-size", type=int, default=32)
     p.add_argument("--timeout", type=float, default=60.0)
+    p.add_argument("--trace-dir", default=None,
+                   help="write trace.json + events.jsonl (flight recorder) "
+                        "under this directory — coordinator role only")
+    p.add_argument("--log-level", default=None,
+                   help="silence/route launcher output: debug | info | "
+                        "warning | error (default: REPRO_LOG env or info)")
+    p.add_argument("--log-file", default=None,
+                   help="mirror launcher output (timestamped) to a file")
     args = p.parse_args(argv)
+    if args.log_level:
+        telemetry.set_level(args.log_level)
+    if args.log_file:
+        telemetry.set_log_file(args.log_file)
 
     if args.smoke:
         args.clients, args.rounds = 2, 6

@@ -42,7 +42,20 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-level", default=None,
+                    help="silence/route launcher output: debug | info | "
+                         "warning | error (default: REPRO_LOG env or info)")
+    ap.add_argument("--log-file", default=None,
+                    help="mirror launcher output (timestamped) to a file")
     args = ap.parse_args()
+
+    from repro import telemetry
+
+    log = telemetry.get_logger("train")
+    if args.log_level:
+        telemetry.set_level(args.log_level)
+    if args.log_file:
+        telemetry.set_log_file(args.log_file)
 
     if args.smoke and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (
@@ -71,9 +84,9 @@ def main():
     mesh = mesh_lib.make_mesh((n_dev // model_par, model_par),
                               ("data", "model"))
     W = n_dev // model_par
-    print(f"[train] arch={cfg.name} mesh={dict(mesh.shape)} mode={args.mode} "
-          f"density={args.density} engine={args.engine} "
-          f"quantize={args.quantize}")
+    log.info(f"[train] arch={cfg.name} mesh={dict(mesh.shape)} "
+             f"mode={args.mode} density={args.density} engine={args.engine} "
+             f"quantize={args.quantize}")
 
     shape = InputShape("smoke", args.seq, args.batch, "train")
     ex_cfg = ExchangeConfig(mode=args.mode, density=args.density,
@@ -98,11 +111,11 @@ def main():
                     cfg.cdtype)
             params, ex_state, loss = step(params, ex_state, batch)
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-                print(f"  step {i:4d} loss={float(loss):.4f}")
+                log.info(f"  step {i:4d} loss={float(loss):.4f}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, params, step=args.steps)
-        print(f"[train] saved {args.checkpoint}")
-    print("[train] done")
+        log.info(f"[train] saved {args.checkpoint}")
+    log.info("[train] done")
 
 
 if __name__ == "__main__":

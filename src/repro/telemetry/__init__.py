@@ -1,0 +1,29 @@
+"""Flight-recorder telemetry for every data-plane view (DESIGN.md §11).
+
+Three pieces, importable as one package:
+
+* :mod:`repro.telemetry.metrics` — in-graph :class:`MetricsState`: a
+  fixed-shape pytree of counters + log2-bucketed histograms (staleness,
+  up/down nnz, update magnitude, per-worker events) updated on device with
+  zero host syncs and drained only at eval boundaries.
+* :mod:`repro.telemetry.trace` — host-side :class:`Recorder`: Chrome
+  trace-event / Perfetto spans (``trace.json``) plus a structured JSONL
+  event log (``events.jsonl``); :data:`NULL` is the free no-op default.
+* :mod:`repro.telemetry.logs` — the leveled ``log`` facility replacing
+  bare prints in the launchers (bare-message stdout by default, one flag
+  to silence or route).
+
+The contract every runner honors: telemetry OFF is the untouched pre-
+telemetry code path (identical compiled artifacts), telemetry ON changes
+no data-plane bit (tests/test_async_sim.py::test_metrics_do_not_change_bits).
+"""
+from . import metrics
+from .metrics import MetricsState
+from .logs import get_logger, set_level, set_log_file, set_recorder
+from .trace import NULL, NullRecorder, Recorder
+
+__all__ = [
+    "metrics", "MetricsState",
+    "Recorder", "NullRecorder", "NULL",
+    "get_logger", "set_level", "set_log_file", "set_recorder",
+]

@@ -1,0 +1,182 @@
+"""In-graph flight-recorder metrics: fixed-shape counters + bounded
+histograms carried on device through the event loops.
+
+The hard constraint (DESIGN.md §11): telemetry must add ZERO host syncs to
+the hot paths and must not perturb the data plane's bit-for-bit contract.
+Both follow from the shape of this module:
+
+* :class:`MetricsState` is a small fixed-shape pytree of int32 counters and
+  log2-bucketed histograms.  Updating it is a handful of scatter-adds that
+  only *read* stage outputs (messages, staleness, worker ids) — nothing
+  feeds back into the data plane, so the training arithmetic is untouched.
+* The serial and batched event loops update metrics in a SEPARATE jitted
+  step (:func:`make_metrics_step`) after the data-plane stages, so the
+  stage executables are literally the same compiled artifacts with metrics
+  on or off.  The scan runner threads the state through its ``lax.scan``
+  carry (reading only optimization-barrier-staged values).
+* Every histogram is integer-valued and every bucket boundary is exact in
+  both float32 and float64 (buckets split at powers of two), so the same
+  event stream produces the SAME MetricsState in every runner — serial,
+  batched, scan, or cluster.
+
+The state is drained to host (:func:`drain`) only at eval boundaries or at
+end of run; nothing here ever calls ``float()``/``np.asarray`` on a live
+device value inside the event loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsify import SparseLeaf
+
+# log2 buckets: bucket b holds integer x with floor(log2(x+1)) == b, i.e.
+# x in [2^b - 1, 2^(b+1) - 2].  24 buckets cover x < 2^24 - 1 (16M events
+# of staleness / nnz — the big-bench scale); larger values clip into the
+# last bucket rather than growing the state.
+N_BINS = 24
+
+# update-magnitude buckets: bucket 0 is exactly-zero, bucket b >= 1 holds
+# squared L2 norms with floor(log2(sq)) == b - 1 - MAG_OFFSET.  64 buckets
+# starting at 2^-40 span vanishing tail updates up to 2^22-scale bursts.
+MAG_BINS = 64
+MAG_OFFSET = 40
+
+
+class MetricsState(NamedTuple):
+    """Fixed-shape on-device telemetry accumulator (one per run)."""
+
+    n_events: jax.Array       # () int32 — events folded in so far
+    per_worker: jax.Array     # (n_workers,) int32 — events per worker slot
+    stale_hist: jax.Array     # (N_BINS,) int32 — per-event staleness
+    up_nnz_hist: jax.Array    # (N_BINS,) int32 — shipped upward nnz
+    down_nnz_hist: jax.Array  # (N_BINS,) int32 — shipped downward nnz
+    mag_hist: jax.Array       # (MAG_BINS,) int32 — |G|^2 exponent buckets
+
+
+def init(n_workers: int) -> MetricsState:
+    return MetricsState(
+        n_events=jnp.zeros((), jnp.int32),
+        per_worker=jnp.zeros((n_workers,), jnp.int32),
+        stale_hist=jnp.zeros((N_BINS,), jnp.int32),
+        up_nnz_hist=jnp.zeros((N_BINS,), jnp.int32),
+        down_nnz_hist=jnp.zeros((N_BINS,), jnp.int32),
+        mag_hist=jnp.zeros((MAG_BINS,), jnp.int32),
+    )
+
+
+def log2_bin(x, n_bins: int = N_BINS):
+    """floor(log2(x+1)) clipped to [0, n_bins).  Exact at the power-of-two
+    bucket boundaries in any float width, so host (float64) and device
+    (float32) binning agree bit-for-bit on integer inputs < 2^24."""
+    xf = jnp.maximum(x, 0).astype(jnp.float32)
+    b = jnp.floor(jnp.log2(xf + 1.0)).astype(jnp.int32)
+    return jnp.clip(b, 0, n_bins - 1)
+
+
+def mag_bin(sq):
+    """Exponent bucket of a squared L2 norm; 0 is reserved for exact zero."""
+    sqf = sq.astype(jnp.float32)
+    b = jnp.floor(jnp.log2(jnp.maximum(sqf, 2.0 ** (-MAG_OFFSET))))
+    b = b.astype(jnp.int32) + jnp.int32(MAG_OFFSET + 1)
+    return jnp.where(sqf > 0, jnp.clip(b, 1, MAG_BINS - 1), 0)
+
+
+def msg_nnz(msg):
+    """Shipped nnz of an (optionally batched) message.  Sparse messages
+    have static frame occupancy k (what the codec prices); dense messages
+    count true non-zeros along the arena axis."""
+    if isinstance(msg, SparseLeaf):
+        k = int(msg.values.shape[-1])
+        return jnp.full(msg.values.shape[:-1], k, jnp.int32)
+    return jnp.sum(msg != 0.0, axis=-1).astype(jnp.int32)
+
+
+def msg_sqnorm(msg):
+    """Squared L2 norm of an (optionally batched) message's values."""
+    vals = msg.values if isinstance(msg, SparseLeaf) else msg
+    return jnp.sum(vals.astype(jnp.float32) ** 2, axis=-1)
+
+
+def update(ms: MetricsState, worker_ids, staleness, up_nnz, down_nnz,
+           mag_sq) -> MetricsState:
+    """Fold one event (scalars) or one batch (``(B,)`` arrays) in.
+
+    Pure jnp scatter-adds — duplicate histogram buckets within a batch
+    accumulate, so the result is identical to folding events one at a
+    time (integer addition commutes).
+    """
+    wid = jnp.asarray(worker_ids, jnp.int32)
+    n = 1 if wid.ndim == 0 else int(wid.shape[0])
+    return MetricsState(
+        n_events=ms.n_events + jnp.int32(n),
+        per_worker=ms.per_worker.at[wid].add(1),
+        stale_hist=ms.stale_hist.at[log2_bin(jnp.asarray(staleness))].add(1),
+        up_nnz_hist=ms.up_nnz_hist.at[log2_bin(up_nnz)].add(1),
+        down_nnz_hist=ms.down_nnz_hist.at[log2_bin(down_nnz)].add(1),
+        mag_hist=ms.mag_hist.at[mag_bin(mag_sq)].add(1),
+    )
+
+
+def make_metrics_step():
+    """jit(metrics fold) for the python event loops: reads the SHIPPED
+    up/down messages plus host-precomputed staleness, entirely outside the
+    data-plane stage executables.  ``ms`` is donated — the accumulator
+    updates in place, one extra dispatch per event (serial) or per batch
+    (batched), zero host syncs."""
+
+    def step(ms, worker_ids, staleness, up_msg, down_msg):
+        return update(ms, worker_ids, staleness,
+                      msg_nnz(up_msg), msg_nnz(down_msg),
+                      msg_sqnorm(down_msg))
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+# ------------------------------------------------------------------ drain
+
+def _bin_label(b: int) -> str:
+    lo, hi = (1 << b) - 1, (1 << (b + 1)) - 2
+    return str(lo) if lo == hi else f"{lo}-{hi}"
+
+
+def _mag_label(b: int) -> str:
+    if b == 0:
+        return "0"
+    e = b - 1 - MAG_OFFSET
+    return f"2^{e}"
+
+
+def hist_dict(counts, labeler=_bin_label) -> dict:
+    """Histogram counts -> the JSON schema used by JSONL / BENCH artifacts:
+    trailing-zero buckets trimmed, labels naming each bucket's range."""
+    counts = [int(c) for c in np.asarray(counts)]
+    last = max((i for i, c in enumerate(counts) if c), default=0)
+    counts = counts[:last + 1]
+    return {"bins": [labeler(b) for b in range(len(counts))],
+            "counts": counts}
+
+
+def drain(ms: MetricsState) -> dict:
+    """Materialize the accumulator on host (the ONLY host sync telemetry
+    performs — call at eval boundaries or end of run)."""
+    return {
+        "n_events": int(ms.n_events),
+        "per_worker": np.asarray(ms.per_worker).tolist(),
+        "staleness_hist": hist_dict(ms.stale_hist),
+        "up_nnz_hist": hist_dict(ms.up_nnz_hist),
+        "down_nnz_hist": hist_dict(ms.down_nnz_hist),
+        "update_mag_hist": hist_dict(ms.mag_hist, labeler=_mag_label),
+    }
+
+
+def summarize_log2(x, n_bins: int = N_BINS) -> dict:
+    """Host-side twin of the in-graph log2 histogram (same buckets, same
+    schema) for values already on host — per-event byte sizes, staleness
+    arrays, bench measurements."""
+    x = np.maximum(np.asarray(x, np.float64), 0.0)
+    b = np.clip(np.floor(np.log2(x + 1.0)).astype(np.int64), 0, n_bins - 1)
+    return hist_dict(np.bincount(b, minlength=n_bins))

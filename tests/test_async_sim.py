@@ -186,3 +186,84 @@ def test_batched_max_batch_one_matches_serial():
     import jax
     for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# flight-recorder telemetry: metrics must not perturb the data plane
+# ---------------------------------------------------------------------------
+
+_METRICS_CONFIGS = [
+    # (strategy, kwargs, secondary_density)
+    ("dgs", dict(density=0.1, quantize="int8"), 0.1),
+    ("dgc_async", dict(density=0.1), 0.1),
+    ("asgd", dict(), None),
+]
+
+
+@pytest.mark.parametrize("name,kw,sec", _METRICS_CONFIGS)
+def test_metrics_do_not_change_bits(name, kw, sec):
+    """DESIGN.md §11's contract: metrics ON is bit-identical to metrics
+    OFF — losses, final params, byte totals — in every runner (serial,
+    batched, scan), and all three runners agree on the drained
+    MetricsState itself."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_strategy
+    from repro.core.scan_runner import run_async_scan
+    from repro.telemetry import metrics as metrics_lib
+
+    params0, grad_fn, batch_fn = _parity_problem()
+    n_workers, n_events = 5, 40
+    sched = async_sim.make_schedule(n_workers, n_events, seed=3, hetero=0.8)
+    tr = async_sim.AsyncTrainer(make_strategy(name, **kw), grad_fn,
+                                n_workers, lr=0.05, secondary_density=sec)
+
+    f_off, _, h_off = tr.run(params0, sched, batch_fn)
+    f_on, _, h_on = tr.run(params0, sched, batch_fn, metrics=True)
+    np.testing.assert_array_equal(h_off.losses, h_on.losses)
+    assert (h_off.up_bytes, h_off.down_bytes) == (h_on.up_bytes,
+                                                  h_on.down_bytes)
+    for a, b in zip(jax.tree.leaves(f_off), jax.tree.leaves(f_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h_off.metrics is None
+
+    f_b, _, h_b = tr.run_batched(params0, sched, batch_fn, metrics=True)
+    np.testing.assert_array_equal(h_off.losses, h_b.losses)
+    for a, b in zip(jax.tree.leaves(f_off), jax.tree.leaves(f_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    strat = make_strategy(name, **kw)
+    batches = [batch_fn(e, int(sched[e])) for e in range(n_events)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    f_sc_off, h_sc_off = run_async_scan(
+        strat, grad_fn, params0, sched, stacked, n_workers=n_workers,
+        lr=0.05, secondary_density=sec)
+    f_sc, h_sc = run_async_scan(
+        strat, grad_fn, params0, sched, stacked, n_workers=n_workers,
+        lr=0.05, secondary_density=sec, metrics=True)
+    np.testing.assert_array_equal(np.asarray(h_sc_off.losses),
+                                  np.asarray(h_sc.losses))
+    np.testing.assert_array_equal(h_off.losses, np.asarray(h_sc.losses))
+    assert (h_sc_off.up_bytes, h_sc_off.down_bytes) == (h_sc.up_bytes,
+                                                        h_sc.down_bytes)
+    for a, b in zip(jax.tree.leaves(f_sc_off), jax.tree.leaves(f_sc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the drained state: correct content, and runner-independent.  The
+    # magnitude histogram's bucket is a float reduction (|G|^2), so it is
+    # checked for mass only; every integer-exact histogram must agree
+    # across runners bucket-for-bucket.
+    md = h_on.metrics
+    assert md["n_events"] == n_events
+    assert md["per_worker"] == np.bincount(
+        sched, minlength=n_workers).tolist()
+    assert sum(md["staleness_hist"]["counts"]) == n_events
+    assert sum(md["update_mag_hist"]["counts"]) == n_events
+    assert md["staleness_hist"] == metrics_lib.summarize_log2(
+        h_on.staleness)
+    for other in (h_b.metrics, h_sc.metrics):
+        a, b = dict(md), dict(other)
+        a.pop("update_mag_hist"), b.pop("update_mag_hist")
+        assert a == b
+        assert sum(other["update_mag_hist"]["counts"]) == n_events

@@ -172,3 +172,55 @@ def test_reset_worker_zeroes_v_row():
     assert float(jnp.abs(state.v[2]).sum()) > 0
     state = ps.reset_worker(state, 2)
     assert float(jnp.abs(state.v[2]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flight-recorder accounting: injected faults must show up in telemetry
+# ---------------------------------------------------------------------------
+
+def test_fault_policy_accounting_matches_seeded_expectations():
+    """Every injected drop, observed retry, and virtual-time cost must be
+    visible in the coordinator's telemetry counters — and the drop counts
+    must equal a host-side replay of each FaultInjector's seeded rng."""
+    grad_fn, batch_fn, params0 = _problem()
+    n_rounds, drop_prob, bandwidth, delay = 8, 0.3, 1e5, 0.01
+    plans = [ClientPlan(client_id=c, n_rounds=n_rounds,
+                        compute_time=1.0 + 0.3 * c, bandwidth=bandwidth,
+                        delay=delay, drop_prob=drop_prob, seed=11)
+             for c in range(3)]
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    _, hist = run_inprocess(strat, grad_fn, params0, batch_fn, plans=plans,
+                            lr=0.05, secondary_density=0.25,
+                            inject_faults=True)
+
+    counters = hist.metrics["counters"]
+    clients = hist.metrics["clients"]
+    assert len(hist.losses) == 3 * n_rounds   # every drop was recovered
+    total_drops = 0
+    for p in plans:
+        cid = p.client_id
+        acct = clients[cid]
+        # the injector draws its rng ONCE per droppable (UP) send: the
+        # n_rounds scheduled sends plus one resend per observed retry.
+        # Replaying those draws must reproduce the injected drop count.
+        rng = np.random.default_rng(p.fault_policy(realtime=False).seed)
+        draws = rng.random(n_rounds + acct["retries"])
+        assert acct["drops"] == int((draws < drop_prob).sum())
+        # every drop forces a reply timeout, so retries >= drops; spurious
+        # timeouts (slow first-compile) may add benign extra retransmits
+        assert acct["retries"] >= acct["drops"]
+        total_drops += acct["drops"]
+        # per-client coordinator counters: all rounds served exactly once
+        assert counters[f"client/{cid}/events"] == n_rounds
+        up = counters[f"client/{cid}/up_bytes"]
+        down = counters[f"client/{cid}/down_bytes"]
+        assert up > 0 and down > 0
+        # virtual time booked with the scheduler == the policy's formula
+        # over exactly the frames the coordinator served
+        expect_cost = n_rounds * delay + (up + down) / bandwidth
+        np.testing.assert_allclose(counters[f"client/{cid}/virtual_cost"],
+                                   expect_cost, rtol=1e-9)
+    assert total_drops > 0, "policy injected nothing — test is vacuous"
+    # duplicate UPs (retransmits that survived) were answered from the
+    # reply cache, never re-applied
+    assert counters.get("dup", 0) == counters.get("reply_cache_hits", 0)

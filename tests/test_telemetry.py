@@ -1,0 +1,176 @@
+"""Unit tests for the flight-recorder layer itself (DESIGN.md §11):
+in-graph metrics, the trace/JSONL recorder, the log facility, and the
+report renderer — the runner-integration contracts live in
+test_async_sim.py / test_cluster.py."""
+import json
+import subprocess
+import sys
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import telemetry
+from repro.telemetry import metrics as M
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# metrics: bucketing, update, drain
+# ---------------------------------------------------------------------------
+
+def test_log2_bin_buckets_split_at_powers_of_two():
+    xs = jnp.asarray([0, 1, 2, 3, 6, 7, 14, 2 ** 30], jnp.int32)
+    got = np.asarray(M.log2_bin(xs, M.N_BINS))
+    # bucket b holds x in [2^b - 1, 2^(b+1) - 2]; huge values clip
+    assert got.tolist() == [0, 1, 1, 2, 2, 3, 3, M.N_BINS - 1]
+
+
+def test_update_batched_equals_sequential_scalars():
+    ms_seq = M.init(4)
+    wids = [0, 2, 2, 3]
+    stals = [0, 3, 1, 7]
+    nnzs = [5, 5, 9, 1]
+    mags = [0.0, 2.5, 0.1, 40.0]
+    for w, s, n, g in zip(wids, stals, nnzs, mags):
+        ms_seq = M.update(ms_seq, jnp.int32(w), jnp.int32(s), jnp.int32(n),
+                          jnp.int32(n), jnp.float32(g))
+    ms_bat = M.update(M.init(4), jnp.asarray(wids, jnp.int32),
+                      jnp.asarray(stals, jnp.int32),
+                      jnp.asarray(nnzs, jnp.int32),
+                      jnp.asarray(nnzs, jnp.int32),
+                      jnp.asarray(mags, jnp.float32))
+    assert M.drain(ms_seq) == M.drain(ms_bat)
+    d = M.drain(ms_seq)
+    assert d["n_events"] == 4
+    assert d["per_worker"] == [1, 0, 2, 1]
+    assert sum(d["staleness_hist"]["counts"]) == 4
+    # the exact-zero magnitude landed in the reserved bin 0
+    assert d["update_mag_hist"]["counts"][0] == 1
+
+
+def test_summarize_log2_is_the_host_twin():
+    vals = [0, 1, 5, 100, 1000, 1000, 2 ** 20]
+    ms = M.init(1)
+    for v in vals:
+        ms = M.update(ms, jnp.int32(0), jnp.int32(v), jnp.int32(0),
+                      jnp.int32(0), jnp.float32(1.0))
+    assert M.drain(ms)["staleness_hist"] == M.summarize_log2(vals)
+
+
+def test_hist_dict_trims_trailing_zeros():
+    h = M.hist_dict([0, 3, 0, 1, 0, 0])
+    assert h["counts"] == [0, 3, 0, 1]
+    assert len(h["bins"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# trace: recorder artifacts
+# ---------------------------------------------------------------------------
+
+def test_recorder_writes_parseable_artifacts(tmp_path):
+    with telemetry.Recorder(tmp_path) as rec:
+        with rec.span("phase/a", detail=1):
+            pass
+        rec.instant("marker")
+        rec.event("progress", event=1, loss=0.5)
+        rec.count("client/0/retries")
+        rec.count("client/0/retries")
+    trace = json.loads((tmp_path / "trace.json").read_text())
+    names = [e["name"] for e in trace["traceEvents"]]
+    assert "phase/a" in names and "marker" in names
+    span = next(e for e in trace["traceEvents"] if e["name"] == "phase/a")
+    assert span["ph"] == "X" and span["dur"] >= 0
+    lines = [json.loads(line) for line in
+             (tmp_path / "events.jsonl").read_text().splitlines()]
+    kinds = [e["kind"] for e in lines]
+    assert kinds == ["progress", "counters"]
+    assert lines[-1]["counters"] == {"client/0/retries": 2}
+
+
+def test_null_recorder_is_free_and_writes_nothing():
+    rec = telemetry.NULL
+    assert not rec.enabled
+    with rec.span("x"):
+        pass
+    rec.event("y", z=1)
+    rec.count("c")
+    assert rec.flush() == []
+    assert rec.counters == {}
+
+
+# ---------------------------------------------------------------------------
+# logs: bare-message stdout + recorder mirroring
+# ---------------------------------------------------------------------------
+
+def test_logger_prints_bare_messages_and_mirrors_to_recorder(capsys):
+    log = telemetry.get_logger("test")
+    rec = telemetry.Recorder()
+    telemetry.set_recorder(rec)
+    try:
+        log.info("[test] hello %d", 7)
+    finally:
+        telemetry.set_recorder(None)
+    assert capsys.readouterr().out == "[test] hello 7\n"
+    mirrored = [json.loads(line) for line in rec._jsonl]
+    assert mirrored and mirrored[0]["kind"] == "log"
+    assert mirrored[0]["msg"] == "[test] hello 7"
+    assert mirrored[0]["logger"] == "test"
+
+
+def test_log_level_silences(capsys):
+    log = telemetry.get_logger("test")
+    telemetry.set_level("warning")
+    try:
+        log.info("[test] chatter")
+        log.warning("[test] kept")
+    finally:
+        telemetry.set_level("info")
+    assert capsys.readouterr().out == "[test] kept\n"
+
+
+# ---------------------------------------------------------------------------
+# report: render + --check gate
+# ---------------------------------------------------------------------------
+
+def _fake_run_dir(tmp_path):
+    rec = telemetry.Recorder(tmp_path)
+    with rec.span("coord/server_batch"):
+        pass
+    rec.event("progress", event=1, loss=1.0, up_bytes=100, down_bytes=80)
+    rec.event("progress", event=2, loss=0.5, up_bytes=200, down_bytes=160)
+    rec.event("run_summary", runner="cluster", n_events=2, up_bytes=200,
+              down_bytes=160, loss_first=1.0, loss_last=0.5,
+              staleness_hist=M.summarize_log2([0, 1]),
+              up_bytes_hist=M.summarize_log2([100, 100]),
+              down_bytes_hist=M.summarize_log2([80, 80]))
+    rec.count("client/0/events", 2)
+    rec.flush()
+    return tmp_path
+
+
+def _report(*args):
+    return subprocess.run(
+        [sys.executable, "scripts/report.py", *map(str, args)],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+
+
+def test_report_renders_and_check_passes(tmp_path):
+    run_dir = _fake_run_dir(tmp_path)
+    proc = _report(run_dir, "--check")
+    assert proc.returncode == 0, proc.stderr
+    assert "Staleness distribution" in proc.stdout
+    assert "Per-stage time breakdown" in proc.stdout
+    assert "coord/server_batch" in proc.stdout
+    assert "Per-client activity" in proc.stdout
+    assert "report --check: OK" in proc.stdout
+
+
+def test_report_check_fails_on_missing_or_corrupt(tmp_path):
+    assert _report(tmp_path / "nope", "--check").returncode == 1
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "trace.json").write_text("{}")
+    (bad / "events.jsonl").write_text("not json\n")
+    assert _report(bad, "--check").returncode == 1
