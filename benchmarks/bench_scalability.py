@@ -19,6 +19,11 @@ Three runtime rows ride along (DESIGN.md §8–9):
 * ``run_big`` (``--full`` only) — the 10M-param / 100-worker / 1M-event
   configuration: full-scale schedule generation + batching, and the
   batched-vs-serial data plane timed on a capped slice of the schedule.
+* ``run_sharded`` — the range-partitioned parameter-server arena
+  (DESIGN.md §12) at S ∈ {1, 2, 4}: per-shard commit loops timed
+  independently (the slowest shard is the critical path), with the
+  bit-parity assert vs the single server inline; CI gates on the
+  S=2 throughput row.
 """
 from __future__ import annotations
 
@@ -73,6 +78,8 @@ def run(quick: bool = False):
                             f"acc={accuracy(final):.4f}"))
     batched_rows, _ = run_batched_loop(quick=quick)
     rows += batched_rows
+    sharded_rows, _ = run_sharded(quick=quick)
+    rows += sharded_rows
     if not quick:
         rows += run_big(quick=False)
     return rows
@@ -179,6 +186,79 @@ def run_arena(quick: bool = False):
                         f"speedup_fused={speedup:.2f}x"))
     assert space.total >= 1_000_000 and space.n_leaves > 1
     return rows, speedup
+
+
+def run_sharded(quick: bool = False):
+    """Sharded parameter-server arena vs the single-server commit path.
+
+    Splits the SAME sparse event traffic across S range-partitioned
+    shards (DESIGN.md §12) and times each shard's fused
+    receive/select/commit loop independently; the sharded wall-clock
+    per event is the max over shards, because in deployment every
+    shard is its own coordinator and the slowest one is the critical
+    path.  Inline asserts pin the tentpole contract — the S-shard
+    final model is bit-identical to the single server's — and each S
+    lands a ``record_perf`` row carrying events/sec, the static
+    per-shard frame bytes, and the peak shard ``M`` size.  Returns
+    ``(rows, throughput_by_S)``.
+    """
+    from repro.cluster import wire
+    from repro.core import server as ps
+    from repro.core.paramspace import ShardSpec
+    from repro.core.sparsify import SparseLeaf
+
+    density = 0.01
+    params, space, ks, (mvals, midx) = _arena_problem(density=density)
+    n_events = 10 if quick else 50
+    n_workers = 4
+    msg = SparseLeaf(values=mvals, indices=midx, size=space.total)
+    rows, thru = [], {}
+    ref_final = None
+    for S in (1, 2, 4):
+        spec = ShardSpec.for_space(space, S)
+        _, states = ps.init_shards(params, n_workers=n_workers,
+                                   n_shards=S, shard_spec=spec)
+        pieces = spec.split_by_shard(msg, ks)
+        per_bytes = wire.shard_frame_bytes_static(spec, ks, "none")
+
+        def event_fn(state, piece, k):
+            state = ps.receive(state, piece)
+            G = ps.send_select(state, k, secondary_density=density)
+            return ps.send_commit(state, k, G)
+
+        event = jax.jit(event_fn, donate_argnums=(0,))
+        dts, new_states = [], []
+        for st, (piece, _) in zip(states, pieces):
+            st = event(st, piece, jnp.int32(0))  # compile (same k as below)
+            jax.block_until_ready(st.M)
+            t0 = time.perf_counter()
+            for e in range(n_events):
+                st = event(st, piece, jnp.int32(e % n_workers))
+            jax.block_until_ready(st.M)
+            dts.append(time.perf_counter() - t0)
+            new_states.append(st)
+        dt = max(dts)  # critical path across parallel shard coordinators
+        final = ps.global_model_shards(params, new_states)
+        if S == 1:
+            ref_final = final
+        else:  # the tentpole contract: sharding never changes the bits
+            assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(jax.tree.leaves(final),
+                                       jax.tree.leaves(ref_final)))
+        thru[S] = n_events / dt
+        record_perf(
+            "scalability", f"sharded/S{S}",
+            config={"n_shards": S, "model_params": int(space.total),
+                    "density": density, "n_workers": n_workers,
+                    "per_shard_frame_bytes": [int(b) for b in per_bytes],
+                    "peak_shard_M_elems": int(max(spec.sizes))},
+            events_per_sec=n_events / dt,
+            nbytes=sum(per_bytes) * n_events, wall_clock_s=dt)
+        rows.append(csv_row(
+            f"sharded/S{S}", dt / n_events * 1e6,
+            f"peak_shard_M={max(spec.sizes)};bits_equal=1;"
+            f"shard_bytes={'/'.join(str(int(b)) for b in per_bytes)}"))
+    return rows, thru
 
 
 def run_scan(quick: bool = False):
@@ -387,11 +467,12 @@ def run_big(quick: bool = False):
 def smoke() -> int:
     """CI entry: exercise the fused arena + scan + batched hot paths.
 
-    Asserts (a) the arena event loop beats the per-leaf baseline and
-    (b) the batched event loop beats the serial reference by >= 1.2x.
+    Asserts (a) the arena event loop beats the per-leaf baseline,
+    (b) the batched event loop beats the serial reference by >= 1.2x,
+    and (c) the 2-shard commit throughput is >= the single server's.
     Wall-clock on shared CI runners is noisy, so a below-threshold first
     measurement gets ONE re-run; the bit/byte-parity asserts inside
-    run_scan/run_batched_loop stay exact.  Writes
+    run_scan/run_batched_loop/run_sharded stay exact.  Writes
     ``BENCH_scalability.json``.
     """
     from .common import write_bench_artifacts
@@ -406,6 +487,11 @@ def smoke() -> int:
         brows2, bspeed = run_batched_loop(quick=True)
         brows += brows2
     rows += brows
+    srows, thru = run_sharded(quick=True)
+    if thru[2] < thru[1]:  # timing flake? measure once more
+        srows2, thru = run_sharded(quick=True)
+        srows += srows2
+    rows += srows
     print("\n".join(rows))
     for path in write_bench_artifacts():
         print(f"wrote {path}")
@@ -416,10 +502,15 @@ def smoke() -> int:
     if bspeed < 1.2:
         print(f"FAIL: batched loop below 1.2x vs serial ({bspeed:.2f}x)")
         ok = False
+    if thru[2] < thru[1]:
+        print(f"FAIL: 2-shard commit throughput below single-server "
+              f"({thru[2]:.1f} vs {thru[1]:.1f} events/s)")
+        ok = False
     if ok:
         print(f"{'OK' if speedup > 1.0 else 'WARN (noisy run)'}: "
               f"fused arena event loop {speedup:.2f}x vs per-leaf; "
-              f"batched loop {bspeed:.2f}x vs serial")
+              f"batched loop {bspeed:.2f}x vs serial; "
+              f"2-shard commit {thru[2] / thru[1]:.2f}x vs single")
     return 0 if ok else 1
 
 
@@ -433,4 +524,6 @@ if __name__ == "__main__":
     out += arena_rows + run_scan(quick=True)
     batched_rows, _ = run_batched_loop(quick=True)
     out += batched_rows
+    sharded_rows, _ = run_sharded(quick=True)
+    out += sharded_rows
     print("\n".join(out))

@@ -17,6 +17,15 @@ bit-packed values included), not an analytic formula.
 For a true multi-process run over TCP sockets:
 
     PYTHONPATH=src python -m repro.launch.cluster --clients 4 --alpha 0.3
+
+and to range-partition the parameter server across S coordinator shards
+(DESIGN.md §12 — bit-identical results, per-shard memory/commit load):
+
+    PYTHONPATH=src python -m repro.launch.cluster --clients 4 --shards 2
+
+(client processes are spawned automatically; a manually launched client
+reaches a sharded coordinator with ``--role client --ports p0,p1,...``,
+one port per shard.)
 """
 import dataclasses
 

@@ -25,3 +25,12 @@ test -s BENCH_scalability.json || {
 rm -rf .ci_telemetry
 timeout 300 python -m repro.launch.cluster --smoke --trace-dir .ci_telemetry
 python scripts/report.py .ci_telemetry --check >/dev/null
+# sharded TCP smoke: 2 range-partitioned coordinator shards over real
+# sockets; --smoke --shards 2 first runs a 1-shard reference and asserts
+# the sharded losses + final params are bit-identical to it, and the
+# report gate additionally checks the shard/{i} counters rendered
+rm -rf .ci_telemetry_sharded
+timeout 300 python -m repro.launch.cluster --smoke --shards 2 \
+  --trace-dir .ci_telemetry_sharded
+python scripts/report.py .ci_telemetry_sharded --check --expect-shards \
+  >/dev/null

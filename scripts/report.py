@@ -8,8 +8,9 @@ artifacts (``--trace-dir`` on the cluster launcher, or any test/bench that
 passed ``recorder=Recorder(dir)``).  The report is plain markdown (renders
 in a terminal as-is): run summary, staleness distribution, up/down frame
 size histograms, the bytes-vs-loss curve, a per-stage wall-clock breakdown
-aggregated from the Chrome-trace spans, and a per-client fault/retry table
-from the counters record.
+aggregated from the Chrome-trace spans, a per-client fault/retry table
+from the counters record, and — for sharded runs — a shard-balance table
+from the ``shard/{i}/...`` counters.
 
 ``--check`` is the CI mode: exit nonzero unless both artifacts exist,
 parse, and the report contains the staleness and bytes sections — the
@@ -168,6 +169,34 @@ def render_clients(events) -> list[str]:
     return out
 
 
+def render_shards(events) -> list[str]:
+    """Shard-balance table from the ``shard/{i}/...`` counters a sharded
+    coordinator run flushes (DESIGN.md §12): arena elements, events, and
+    up/down bytes per range-partitioned shard."""
+    counters = (_last(events, "counters") or {}).get("counters", {})
+    per_shard: dict[str, dict[str, float]] = {}
+    for name, v in counters.items():
+        parts = name.split("/")
+        if len(parts) == 3 and parts[0] == "shard":
+            per_shard.setdefault(parts[1], {})[parts[2]] = v
+    if len(per_shard) < 2:  # single-shard runs don't need a balance table
+        return []
+    cols = sorted({c for fields in per_shard.values() for c in fields})
+    out = ["## Shard balance", "",
+           "| shard | " + " | ".join(cols) + " |",
+           "|---:|" + "---:|" * len(cols)]
+    for sid in sorted(per_shard, key=lambda s: int(s) if s.isdigit() else 0):
+        fields = per_shard[sid]
+        cells = []
+        for c in cols:
+            v = fields.get(c, 0)
+            cells.append(f"{v:.3f}" if isinstance(v, float)
+                         and not float(v).is_integer() else f"{int(v)}")
+        out.append(f"| {sid} | " + " | ".join(cells) + " |")
+    out.append("")
+    return out
+
+
 def render_report(run_dir: pathlib.Path) -> str:
     trace_events, events = load_run(run_dir)
     summary = _last(events, "run_summary") or {}
@@ -187,6 +216,7 @@ def render_report(run_dir: pathlib.Path) -> str:
     lines += render_bytes_vs_loss(events)
     lines += render_stage_breakdown(trace_events)
     lines += render_clients(events)
+    lines += render_shards(events)
     return "\n".join(lines)
 
 
@@ -199,6 +229,9 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="CI gate: exit nonzero unless artifacts parse and "
                          "the staleness + bytes sections rendered")
+    ap.add_argument("--expect-shards", action="store_true",
+                    help="with --check: also require the shard-balance "
+                         "table (sharded coordinator runs)")
     args = ap.parse_args(argv)
 
     try:
@@ -218,6 +251,8 @@ def main(argv=None) -> int:
                    ("Staleness distribution", "Up frame bytes",
                     "Down frame bytes")
                    if f"### {title}" not in report]
+        if args.expect_shards and "## Shard balance" not in report:
+            missing.append("Shard balance")
         if missing:
             print(f"report --check: missing sections: {missing}",
                   file=sys.stderr)

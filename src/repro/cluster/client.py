@@ -33,9 +33,17 @@ class ClusterClient:
     maps local steps to the event index fed to batch_fn/lr_fn — in
     schedule-driven (parity) runs this is the client's slice of the global
     schedule, otherwise the local step count.
+
+    Against a SHARDED parameter server (DESIGN.md §12) ``transport`` is a
+    list of per-shard transports (shard order) and ``shard_spec`` the
+    range partition: each upward message splits by index range and fans
+    out as one shard-local frame per coordinator shard, and the per-shard
+    downward diffs merge (indices rebased back by ``bounds[s]``) into one
+    global message before the single arena apply — bit-equal to the
+    unsharded exchange.
     """
 
-    transport: Any
+    transport: Any                       # one transport, or one per shard
     strategy: Strategy
     grad_fn: Callable
     params0: Any
@@ -47,10 +55,23 @@ class ClusterClient:
     reply_timeout: float | None = None   # retransmit interval under drops
     max_retries: int = 50
     recorder: Any = None                 # telemetry.Recorder (None = no-op)
+    shard_spec: Any = None               # ShardSpec; required with S > 1
+    pin_slot: bool = False               # propose slot == client_id on HELLO
 
     def __post_init__(self):
         if self.recorder is None:
             self.recorder = telemetry.NULL
+        self._transports = (list(self.transport)
+                            if isinstance(self.transport, (list, tuple))
+                            else [self.transport])
+        if len(self._transports) > 1 and self.shard_spec is None:
+            raise ValueError("a sharded client (multiple transports) "
+                             "needs shard_spec=")
+        if self.shard_spec is not None \
+                and len(self._transports) != self.shard_spec.n_shards:
+            raise ValueError(
+                f"{len(self._transports)} transports for "
+                f"{self.shard_spec.n_shards} shards")
         # retransmits this client issued after a reply timed out — the
         # observable half of the fault injector's drop accounting
         self.retries = 0
@@ -68,11 +89,16 @@ class ClusterClient:
 
         hello, _ = wire.encode_message(wire.HELLO, addr,
                                        self._proposed_slot())
-        self.transport.send(wire.COORDINATOR_ID, hello)
-        _, reply = self.transport.recv(timeout=None)
-        welcome = wire.decode_message(reply)
-        assert welcome.type == wire.WELCOME, welcome.type
-        slot = welcome.seq
+        slot = None
+        for tp in self._transports:
+            tp.send(wire.COORDINATOR_ID, hello)
+            _, reply = tp.recv(timeout=None)
+            welcome = wire.decode_message(reply)
+            assert welcome.type == wire.WELCOME, welcome.type
+            # every shard must seat this client in the same v-row slot so
+            # batch_fn(e, slot) is well defined — shard 0 decides
+            if slot is None:
+                slot = welcome.seq
 
         theta = space.pack(self.params0)   # the local model, as one arena
         strat = self.strategy.init(self.params0)
@@ -80,7 +106,8 @@ class ClusterClient:
         for step in range(self.plan.n_rounds):
             if not participates(self.plan, step):
                 skip, _ = wire.encode_message(wire.SKIP, addr, seq)
-                self.transport.send(wire.COORDINATOR_ID, skip)
+                for tp in self._transports:
+                    tp.send(wire.COORDINATOR_ID, skip)
                 continue
             e = step if self.event_fn is None else int(self.event_fn(step))
             lr = self.lr if self.lr_fn is None else float(self.lr_fn(e))
@@ -88,36 +115,61 @@ class ClusterClient:
             with rec.span("client/step", cat=f"client/{addr}"):
                 strat, loss, msg = client_step(theta, strat, batch, lr)
             with rec.span("client/encode", cat=f"client/{addr}"):
-                payload, _ = wire.encode_message(
-                    wire.UP, addr, seq, [msg], mode=up_mode, seg=up_seg,
-                    aux=float(loss))
+                if self.shard_spec is not None:
+                    frames = wire.encode_sharded_message(
+                        wire.UP, addr, seq, msg, shard_spec=self.shard_spec,
+                        mode=up_mode, seg=up_seg, aux=float(loss))
+                    payloads = [p for p, _ in frames]
+                else:
+                    payload, _ = wire.encode_message(
+                        wire.UP, addr, seq, [msg], mode=up_mode, seg=up_seg,
+                        aux=float(loss))
+                    payloads = [payload]
             with rec.span("client/exchange", cat=f"client/{addr}"):
-                down = self._exchange(payload, seq)
+                # fan out every shard's UP before blocking on any DOWN:
+                # the shards run concurrently, the client pays one RTT
+                for tp, p in zip(self._transports, payloads):
+                    tp.send(wire.COORDINATOR_ID, p)
+                downs = [self._await_down(tp, p, seq)
+                         for tp, p in zip(self._transports, payloads)]
             with rec.span("client/apply", cat=f"client/{addr}"):
-                theta = apply_G(theta, down.leaves[0])
+                if self.shard_spec is not None:
+                    G = self.shard_spec.merge([d.leaves[0] for d in downs])
+                else:
+                    G = downs[0].leaves[0]
+                theta = apply_G(theta, G)
             losses.append(float(loss))
             seq += 1
         bye, _ = wire.encode_message(wire.BYE, addr, seq)
-        self.transport.send(wire.COORDINATOR_ID, bye)
+        for tp in self._transports:
+            tp.send(wire.COORDINATOR_ID, bye)
         return space.unpack(theta), losses
 
     def _proposed_slot(self) -> int:
         # schedule-driven runs pin client addr == worker slot; elastic
-        # scenarios let the coordinator pick (AUTO via 0xFFFFFFFF)
-        return self.plan.client_id if self.event_fn is not None \
-            else 0xFFFFFFFF
+        # scenarios let the coordinator pick (AUTO via 0xFFFFFFFF).
+        # pin_slot forces pinning for sharded runs, where every shard
+        # coordinator must agree on the slot (see run()).
+        if self.event_fn is not None or self.pin_slot:
+            return self.plan.client_id
+        return 0xFFFFFFFF
 
-    def _exchange(self, payload: bytes, seq: int) -> wire.Message:
-        """Send one UP and wait for its DOWN, retransmitting on loss."""
-        self.transport.send(wire.COORDINATOR_ID, payload)
+    def _await_down(self, transport, payload: bytes,
+                    seq: int) -> wire.Message:
+        """Wait for one shard's DOWN to ``seq``, retransmitting on loss.
+
+        The UP was already sent by the fan-out loop in :meth:`run`; this
+        only retransmits after a timeout (at-least-once, deduplicated by
+        the coordinator on ``seq``).
+        """
         for _ in range(self.max_retries):
             try:
-                _, reply = self.transport.recv(timeout=self.reply_timeout)
+                _, reply = transport.recv(timeout=self.reply_timeout)
             except RecvTimeout:
                 self.retries += 1
                 self.recorder.count(
                     f"client/{self.plan.client_id}/retries")
-                self.transport.send(wire.COORDINATOR_ID, payload)
+                transport.send(wire.COORDINATOR_ID, payload)
                 continue
             down = wire.decode_message(reply)
             if down.type == wire.DOWN and down.seq == seq:

@@ -65,11 +65,24 @@ class Coordinator:
     # are bit-equal to the serial ones, so this is purely a perf knob.
     max_batch: int | None = None
     recorder: Any = None               # telemetry.Recorder (None = no-op)
+    # sharded parameter server (DESIGN.md §12): this coordinator owns the
+    # contiguous arena range shard_spec.bounds[shard_id:shard_id+2].  Its
+    # ServerState, stages, seg tables, and wire frames are all over THAT
+    # sub-arena — everything below runs unchanged because a leaf-aligned
+    # shard is itself a complete (smaller) parameter arena.
+    shard_spec: Any = None             # paramspace.ShardSpec | None
+    shard_id: int = 0
 
     def __post_init__(self):
         if self.recorder is None:
             self.recorder = telemetry.NULL
-        self.sstate = ps.init(self.params0, self.n_slots)
+        if self.shard_spec is not None:
+            leaves = jax.tree.leaves(self.params0)
+            self._params0_local = self.shard_spec.shard_leaves(
+                leaves, self.shard_id)
+        else:
+            self._params0_local = self.params0
+        self.sstate = ps.init(self._params0_local, self.n_slots)
         self._batched_server = async_sim.make_batched_server_step(
             self.secondary_density, self.secondary_spec)
         self._commit_rows = async_sim.make_batched_commit(
@@ -97,6 +110,10 @@ class Coordinator:
         self.counters: dict[str, float] = {}
         self._up_sizes: list[int] = []
         self._down_sizes: list[int] = []
+        # the shard-balance table's size column: how much of the arena
+        # (and therefore of M / each v row) this coordinator holds
+        self.counters[f"shard/{self.shard_id}/arena_elems"] = \
+            self.sstate.space.total
 
     def _count(self, name: str, n: float = 1):
         self.counters[name] = self.counters.get(name, 0) + n
@@ -115,6 +132,9 @@ class Coordinator:
             # so they recompile on the next event — correctness unaffected
         self._slot_of[client] = slot
         self._last_seq[client] = -1
+        # a rejoining client id must not inherit the previous tenant's
+        # cached reply (its seq numbers restart at 0)
+        self._reply_cache.pop(client, None)
         self._joined.add(client)
         self._last_sync.setdefault(slot, 0)
         return slot
@@ -125,6 +145,11 @@ class Coordinator:
             self.sstate = ps.reset_worker(self.sstate, slot)
             self._free.append(slot)
             self._last_sync.pop(slot, None)
+        # bound the at-least-once dedup state: a departed client can never
+        # retransmit, so its cached reply and seq watermark are garbage —
+        # the cache holds at most one entry per LIVE client
+        self._reply_cache.pop(client, None)
+        self._last_seq.pop(client, None)
         self._left.add(client)
         if self.scheduler is not None:
             self.scheduler.deactivate(client)
@@ -200,6 +225,10 @@ class Coordinator:
             self._up_sizes.append(len(payload))
             self._count(f"client/{src}/events")
             self._count(f"client/{src}/up_bytes", len(payload))
+            # per-shard counter family: scripts/report.py renders these
+            # as the shard-balance table (one row per coordinator shard)
+            self._count(f"shard/{self.shard_id}/events")
+            self._count(f"shard/{self.shard_id}/up_bytes", len(payload))
             e = len(self._losses)
             self._losses.append(float(np.float32(msg.aux)))
             self._served_slots.append(slot)
@@ -237,6 +266,7 @@ class Coordinator:
                 self.down_bytes += len(reply)
                 self._down_sizes.append(len(reply))
                 self._count(f"client/{src}/down_bytes", len(reply))
+                self._count(f"shard/{self.shard_id}/down_bytes", len(reply))
                 self._last_seq[src] = msg.seq
                 self._reply_cache[src] = reply
                 self.transport.send(src, reply)
@@ -330,7 +360,9 @@ class Coordinator:
         return bool(self._joined) and self._joined <= self._left
 
     def _finish(self):
-        final = ps.global_model(self.params0, self.sstate)
+        # sharded coordinators return their shard's leaves; the runner /
+        # launcher concatenates shard results back into the full pytree
+        final = ps.global_model(self._params0_local, self.sstate)
         staleness = np.asarray(self._staleness, np.int64)
         metrics = {
             "n_events": len(self._losses),
@@ -354,9 +386,15 @@ class Coordinator:
         rec = self.recorder
         if rec.enabled:
             for name, n in self.counters.items():
-                rec.count(name, n)
-            async_sim._record_run_summary(
-                rec, "cluster", hist, None, None,
-                np.asarray(self._up_sizes, np.int64),
-                np.asarray(self._down_sizes, np.int64))
+                # shard coordinators share one recorder: every shard sees
+                # the same events, so only shard 0 flushes the run-level /
+                # per-client families (they would multiply-count), while
+                # each shard contributes its own shard/{i}/* rows
+                if self.shard_id == 0 or name.startswith("shard/"):
+                    rec.count(name, n)
+            if self.shard_id == 0:
+                async_sim._record_run_summary(
+                    rec, "cluster", hist, None, None,
+                    np.asarray(self._up_sizes, np.int64),
+                    np.asarray(self._down_sizes, np.int64))
         return final, hist

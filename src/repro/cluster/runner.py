@@ -10,21 +10,30 @@ Two entry points:
   :class:`transport.VirtualClock` orders events by per-client virtual time
   (compute speed + measured bytes / bandwidth + fault delay), supporting
   partial participation, joins/leaves, and non-IID sharding.
+
+``n_shards > 1`` range-partitions the parameter arena across S coordinator
+shards (DESIGN.md §12): each shard runs its OWN copy of the schedule over
+its own endpoint, clients fan every up-frame out by index range and merge
+the per-shard downward diffs — losses/params reproduce the single-shard
+run bit-for-bit because disjoint-range scatter-adds commute.
 """
 from __future__ import annotations
 
 import threading
 
+import jax
 import numpy as np
 
 from repro.core import engine as engine_lib
 from repro.core.engine import CompressionSpec
+from repro.core.paramspace import ParamSpace, ShardSpec
 
 from . import wire
 from .client import ClusterClient
 from .coordinator import Coordinator
 from .scenarios import ClientPlan
-from .transport import FaultInjector, InProcHub, ScheduleDriven, VirtualClock
+from .transport import (FaultInjector, InProcHub, ScheduleDriven,
+                        ShardEndpointView, VirtualClock)
 
 
 def run_inprocess(
@@ -43,6 +52,7 @@ def run_inprocess(
     inject_faults: bool = False,
     timeout: float = 300.0,
     recorder=None,
+    n_shards: int = 1,
 ):
     """Run coordinator + clients on the in-process transport.
 
@@ -52,6 +62,18 @@ def run_inprocess(
     """
     if (schedule is None) == (plans is None):
         raise ValueError("pass exactly one of schedule= or plans=")
+    if n_shards > 1:
+        if plans is not None:
+            raise NotImplementedError(
+                "sharded runs are schedule-driven (parity mode); the "
+                "VirtualClock scenario scheduler books per-client costs "
+                "event by event, which S independent shard clocks cannot "
+                "reproduce consistently")
+        if inject_faults:
+            raise NotImplementedError(
+                "fault injection wraps a client's single endpoint; the "
+                "sharded client multiplexes one endpoint across shard "
+                "views — inject faults on single-shard runs")
 
     hub = InProcHub()
     coord_t = hub.endpoint(wire.COORDINATOR_ID)
@@ -78,6 +100,11 @@ def run_inprocess(
         virtual_costs = {p.client_id: p.fault_policy(realtime=False)
                          for p in plans}
 
+    shard_spec = None
+    if n_shards > 1:
+        shard_spec = ShardSpec.for_space(ParamSpace.from_tree(params0),
+                                         n_shards)
+
     coord = Coordinator(
         transport=coord_t,
         params0=params0,
@@ -88,7 +115,24 @@ def run_inprocess(
         virtual_costs=virtual_costs,
         recv_timeout=timeout,
         recorder=recorder,
+        shard_spec=shard_spec,
+        shard_id=0,
     )
+    # shards 1..S-1: same schedule, own cursor, own endpoint — every shard
+    # sees the identical event stream (clients fan each UP out to all of
+    # them), so the independent ScheduleDriven copies stay in lockstep
+    shard_coords = [Coordinator(
+        transport=hub.endpoint(wire.COORDINATOR_ID - s),
+        params0=params0,
+        n_slots=n_workers,
+        secondary_density=secondary_density,
+        secondary_spec=secondary_spec,
+        scheduler=ScheduleDriven(schedule),
+        recv_timeout=timeout,
+        recorder=recorder,
+        shard_spec=shard_spec,
+        shard_id=s,
+    ) for s in range(1, n_shards)]
 
     clients, threads, errors, injectors = [], [], [], {}
     for p in plans:
@@ -99,7 +143,10 @@ def run_inprocess(
                 droppable=lambda payload: payload[:1] == bytes([wire.UP]))
             injectors[p.client_id] = endpoint
         c = ClusterClient(
-            transport=endpoint,
+            transport=(endpoint if n_shards == 1 else
+                       [ShardEndpointView(endpoint, wire.COORDINATOR_ID - s)
+                        for s in range(n_shards)]),
+            shard_spec=shard_spec,
             strategy=strategy,
             grad_fn=grad_fn,
             params0=params0,
@@ -125,16 +172,54 @@ def run_inprocess(
         threads.append(t)
         t.start()
 
+    shard_results: list = [None] * n_shards
+    coord_errors: list = []
+
+    def _serve_shard(s, c):
+        try:
+            shard_results[s] = c.serve(max_events=max_events)
+        except Exception as exc:
+            coord_errors.append(exc)
+
+    shard_threads = [threading.Thread(target=_serve_shard, args=(s + 1, c),
+                                      daemon=True)
+                     for s, c in enumerate(shard_coords)]
+    for t in shard_threads:
+        t.start()
     try:
         final, hist = coord.serve(max_events=max_events)
     except Exception:
         if errors:   # a dead client explains the coordinator timeout better
             raise errors[0]
+        if coord_errors:
+            raise coord_errors[0]
         raise
     for t in threads:
         t.join(timeout=timeout)
+    for t in shard_threads:
+        t.join(timeout=timeout)
     if errors:
         raise errors[0]
+    if coord_errors:
+        raise coord_errors[0]
+    if n_shards > 1:
+        # stitch the shard results back together: shard 0's History carries
+        # the event log (every shard saw the identical stream), bytes sum
+        # across shards, shard/{i}/* counters merge, and the per-shard leaf
+        # lists concatenate back into the full parameter pytree (shard
+        # order == leaf order for a leaf-aligned ShardSpec)
+        shard_results[0] = (final, hist)
+        leaves = [leaf for f, _ in shard_results
+                  for leaf in jax.tree.leaves(f)]
+        final = jax.tree.unflatten(jax.tree.structure(params0), leaves)
+        counters = dict(hist.metrics["counters"])
+        for _, h in shard_results[1:]:
+            counters.update({k: v for k, v in h.metrics["counters"].items()
+                             if k.startswith("shard/")})
+        hist = hist._replace(
+            up_bytes=sum(h.up_bytes for _, h in shard_results),
+            down_bytes=sum(h.down_bytes for _, h in shard_results),
+            metrics={**hist.metrics, "counters": counters})
     # fold the clients' fault accounting into the coordinator's metrics:
     # injected drops (from each FaultInjector) vs observed retransmits
     # (from each client) — what test_cluster's accounting test reconciles

@@ -178,6 +178,45 @@ def frame_bytes_static(seg, size: int, mode: str = "none") -> int:
     return _ENVELOPE.size + arena_frame_bytes(seg, size, mode)
 
 
+def shard_frame_bytes_static(shard_spec, seg, mode: str = "none"):
+    """Per-shard static wire bytes of one sharded sparse arena message.
+
+    Shard ``s`` ships its own ARENA frame over the ``sizes[s]``-element
+    sub-arena: its slice of the seg table, indices rebased shard-local
+    (and therefore possibly NARROWER — ``index_dtype`` derives from the
+    shard size, not the global arena size), its tensors' scales.  The
+    tuple is a pure function of ``(shard_spec, seg, mode)``; its sum is
+    the sharded run's exact per-event up/down byte cost (each shard pays
+    its own envelope + header — the only bytes an S-shard run adds over
+    the single-server frame).
+    """
+    return tuple(
+        frame_bytes_static(shard_spec.shard_seg(seg, s), size, mode)
+        for s, size in enumerate(shard_spec.sizes))
+
+
+def encode_sharded_message(msg_type: int, sender: int, seq: int, msg, *,
+                           shard_spec, mode: str = "none", seg=None,
+                           aux: float = 0.0):
+    """Route one arena message as ``S`` shard-local frames (DESIGN.md §12).
+
+    The message splits by index range (``ShardSpec.split_by_shard`` —
+    indices rebased ``global - bounds[s]``, seg table sliced per shard)
+    and each piece encodes as its own complete message so coordinator
+    shard ``s`` decodes ONLY its range, with per-tensor quantization
+    scales identical to the unsharded frame (leaf-aligned shards keep
+    whole tensors, so each segment's scale is computed over the same
+    values).  Returns ``[(payload, shipped_piece), ...]`` in shard order;
+    ``ShardSpec.merge`` of the shipped pieces is bit-equal to the
+    single-frame ``encode_message`` shipped leaf.
+    """
+    out = []
+    for piece, sub_seg in shard_spec.split_by_shard(msg, seg):
+        out.append(encode_message(msg_type, sender, seq, [piece],
+                                  mode=mode, seg=sub_seg, aux=aux))
+    return out
+
+
 def dense_frame_bytes(nnz, size: int):
     """Frame bytes of a dense f32 leaf with ``nnz`` nonzeros — the codec
     picks the cheaper of DENSE / DENSE_COO.  Works elementwise on numpy
@@ -265,6 +304,9 @@ def encode_arena_leaf_segments(leaf: SparseLeaf, mode: str, seg):
     seg = tuple(int(s) for s in seg)
     k, size = int(leaf.k), int(leaf.size)
     assert sum(seg) == k, (seg, k)
+    if not seg:   # an empty shard's frame: header only (k == 0)
+        body = _HEADER.pack(0, MODES[mode], ARENA, 0, size)
+        return _LEN.pack(len(body)) + body, leaf
     idx = np.asarray(leaf.indices).astype(index_dtype(size))
     codes, scales, dq = [], [], []
     off = 0
@@ -305,6 +347,9 @@ def pack_from_arena(leaf: SparseLeaf, mode: str, seg):
     seg = tuple(int(s) for s in seg)
     k, size = int(leaf.k), int(leaf.size)
     assert sum(seg) == k, (seg, k)
+    if not seg:   # an empty shard's frame: header only (k == 0)
+        body = _HEADER.pack(0, MODES[mode], ARENA, 0, size)
+        return _LEN.pack(len(body)) + body, leaf
     codes, scales, dq = wire_pack.quantize_pack(
         leaf.values, mode=mode, seg=seg)
     idx = wire_pack.narrow_indices(leaf.indices, size=size)

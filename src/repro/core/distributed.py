@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from . import engine as engine_lib
 from .engine import CompressionSpec
+from .paramspace import ShardSpec
 from .sparsify import density_to_k
 
 
@@ -81,18 +82,13 @@ def init_state(params, cfg: ExchangeConfig, n_workers: int) -> ExchangeState:
     vel = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     if cfg.mode == "shardedps":
         def shard_zeros(p):
-            size = int(p.size)
-            shard = _shard_size(size, n_workers)
+            shard = ShardSpec.even_stride(int(p.size), n_workers)
             return jnp.zeros((shard,), jnp.float32)
         m = jax.tree.map(shard_zeros, params)
         v = jax.tree.map(shard_zeros, params)
     else:
         m = v = jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32), params)
     return ExchangeState(velocity=vel, m_shard=m, v_shard=v)
-
-
-def _shard_size(size: int, n: int) -> int:
-    return -(-size // n)  # ceil
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +228,12 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
         um_shape = um.shape
     u2d = um.reshape(S, rest)
     g2d = gm.reshape(S, rest).astype(jnp.float32)
-    shard_rest = -(-rest // W)
+    # the mesh PS and the cluster PS share ONE partition rule: this stride
+    # is ShardSpec.even(rest, W)'s shard width, and `idx // shard_rest`
+    # below is exactly ShardSpec.owner_of for that even spec — so the
+    # in-graph sharded exchange and coordinator sharding agree on which
+    # worker owns any flat index
+    shard_rest = ShardSpec.even_stride(rest, W)
     k_row = max(1, min(rest, -(-k // S)))
     uacc = engine_lib.velocity_accumulate(u2d, g2d, momentum=cfg.momentum,
                                           lr=lr)
@@ -323,7 +324,7 @@ def rows_view(shape, shard_axis):
 def shardedps_state_size(shape, shard_axis, n_workers: int) -> int:
     """Per-device M/v shard length for one leaf (row-major layout)."""
     S, rest, _ = rows_view(shape, shard_axis)
-    return S * (-(-rest // n_workers))
+    return S * ShardSpec.even_stride(rest, n_workers)
 
 
 # ---------------------------------------------------------------------------

@@ -24,12 +24,21 @@ that makes the fusion possible while keeping the paper's semantics:
   ranges are disjoint, so one scatter-add applies every tensor's update.
 * ``split`` — the inverse view for tests/inspection: a global arena
   message back into per-leaf ``SparseLeaf``s with local indices.
+* :class:`ShardSpec` — a range partition of the arena index space
+  ``[0, total)`` into ``S`` contiguous shards (DESIGN.md §12).  The
+  rebasing rule is one subtraction: ``shard_local = global - bounds[s]``.
+  ``ShardSpec.for_space`` aligns shard boundaries to leaf boundaries, so
+  every shard is itself a valid (smaller) parameter arena and the
+  per-tensor selection semantics are preserved shard-locally;
+  ``ShardSpec.even`` is the equal-stride rule ``core/distributed.py``'s
+  shardedps mesh exchange partitions with (``ceil(total / S)`` per
+  shard, ``owner = index // stride``).
 
 Selection stays per-tensor (bit-equal to the old per-leaf path, enforced in
 tests/test_paramspace.py); only the *bookkeeping* — server receive/commit,
 worker apply, the wire frame — is fused into single-buffer operations.
 A single flat buffer also shards trivially (contiguous ranges per host),
-which per-leaf lists never did.
+which per-leaf lists never did — :class:`ShardSpec` is that partition.
 """
 from __future__ import annotations
 
@@ -89,6 +98,8 @@ class ParamSpace:
     def pack(self, tree) -> jax.Array:
         """Pytree -> one contiguous ``(total,)`` f32 arena."""
         leaves = jax.tree.leaves(tree)
+        if not leaves:   # an empty shard of a ShardSpec is a valid space
+            return jnp.zeros((0,), jnp.float32)
         return jnp.concatenate(
             [jnp.asarray(l).reshape(-1).astype(jnp.float32) for l in leaves])
 
@@ -111,6 +122,10 @@ class ParamSpace:
         arithmetic is bit-equal to per-leaf messages); the results
         concatenate into one global-index SparseLeaf over the arena.
         """
+        if not self.sizes:   # an empty shard of a ShardSpec is a valid space
+            return SparseLeaf(values=jnp.zeros((0,), jnp.float32),
+                              indices=jnp.zeros((0,), jnp.int32),
+                              size=self.total)
         vals, idxs = [], []
         for off, k, view in zip(self.offsets, ks, self.views(x)):
             leaf = engine_lib.select(view, k, spec)
@@ -139,3 +154,191 @@ class ParamSpace:
                                   size=size))
             pos += k
         return out
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Range partition of the arena index space ``[0, total)`` into ``S``
+    contiguous shards (DESIGN.md §12).
+
+    ``bounds`` has ``S + 1`` ascending entries with ``bounds[0] == 0`` and
+    ``bounds[-1] == total``; shard ``s`` owns global indices
+    ``[bounds[s], bounds[s+1])`` and rebases them shard-local with ONE
+    subtraction: ``local = global - bounds[s]``.  Ranges are disjoint, so
+    scatter-adds routed per shard touch disjoint buffers and commute
+    bit-exactly with the unsharded single-buffer scatter — the contract
+    that makes an ``S``-shard parameter server reproduce the single-server
+    run bit-for-bit.
+
+    ``leaf_splits`` (set by :meth:`for_space`) additionally aligns every
+    shard boundary to a leaf boundary: shard ``s`` owns whole tensors
+    ``leaf_splits[s]:leaf_splits[s+1]``, so each shard is itself a valid
+    parameter arena, per-tensor top-k selection restricted to a shard
+    equals the slice of the global selection, and segment-wise wire
+    quantization scales are unchanged by the split.  The data plane
+    (cluster/server sharding) requires this; :meth:`even` — the stride
+    rule ``core/distributed.py``'s shardedps mesh exchange uses
+    (``owner = index // stride``) — and arbitrary ``bounds`` are supported
+    by the generic :meth:`split_by_shard` for tests and index math.
+    """
+
+    bounds: tuple[int, ...]
+    leaf_splits: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        b = self.bounds
+        if len(b) < 2 or b[0] != 0 or any(x > y for x, y in zip(b, b[1:])):
+            raise ValueError(f"bad shard bounds {b}")
+
+    # -- construction --------------------------------------------------------
+
+    @staticmethod
+    def even_stride(total: int, n_shards: int) -> int:
+        """The equal-shard stride ``ceil(total / n_shards)`` — the single
+        partition-arithmetic rule shared with ``core/distributed.py``'s
+        shardedps exchange (``owner = index // stride``)."""
+        return -(-int(total) // int(n_shards))
+
+    @classmethod
+    def even(cls, total: int, n_shards: int) -> "ShardSpec":
+        """Equal contiguous ranges of ``even_stride`` elements (the last
+        shard takes the remainder; shards past ``total`` are empty)."""
+        stride = cls.even_stride(total, n_shards) if total else 0
+        bounds = tuple(min(s * stride, int(total))
+                       for s in range(n_shards)) + (int(total),)
+        return cls(bounds=bounds)
+
+    @classmethod
+    def for_space(cls, space: ParamSpace, n_shards: int) -> "ShardSpec":
+        """Leaf-ALIGNED partition balancing element counts greedily.
+
+        Boundary ``s`` lands on the leaf edge closest to ``total * s / S``
+        (never before the previous boundary), so shards stay contiguous in
+        leaf order and as size-balanced as whole tensors allow.  Models
+        with fewer leaves than shards get empty trailing shards.
+        """
+        edges = tuple(space.offsets) + (space.total,)   # leaf edges
+        splits = [0]
+        for s in range(1, n_shards):
+            target = space.total * s / n_shards
+            j = min(range(splits[-1], len(edges)),
+                    key=lambda j: (abs(edges[j] - target), j),
+                    default=splits[-1])
+            splits.append(max(j, splits[-1]))
+        splits.append(space.n_leaves)
+        return cls(bounds=tuple(edges[j] for j in splits),
+                   leaf_splits=tuple(splits))
+
+    # -- layout ----------------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def total(self) -> int:
+        return self.bounds[-1]
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        """Per-shard element counts (``max(sizes)`` is the peak per-shard
+        ``M`` footprint the sharded server scales down with ``S``)."""
+        return tuple(b - a for a, b in zip(self.bounds, self.bounds[1:]))
+
+    def owner_of(self, indices):
+        """Shard id owning each global index (host-side numpy)."""
+        return np.searchsorted(np.asarray(self.bounds),
+                               np.asarray(indices), side="right") - 1
+
+    def shard_leaves(self, leaves: list, s: int) -> list:
+        """The leaves shard ``s`` owns (leaf-aligned specs only)."""
+        if self.leaf_splits is None:
+            raise ValueError("shard_leaves needs a leaf-aligned ShardSpec "
+                             "(ShardSpec.for_space)")
+        return list(leaves[self.leaf_splits[s]:self.leaf_splits[s + 1]])
+
+    def shard_seg(self, seg, s: int) -> tuple[int, ...]:
+        """Shard ``s``'s slice of a per-leaf segmentation table
+        (leaf-aligned specs only): whole tensors, whole segments."""
+        if self.leaf_splits is None:
+            raise ValueError("shard_seg needs a leaf-aligned ShardSpec")
+        return tuple(seg[self.leaf_splits[s]:self.leaf_splits[s + 1]])
+
+    # -- message routing ---------------------------------------------------
+
+    def split_dense(self, x) -> list:
+        """Dense ``(total,)`` arena -> per-shard contiguous slices."""
+        return [x[a:b] for a, b in zip(self.bounds, self.bounds[1:])]
+
+    def split_by_shard(self, msg, seg=None) -> list:
+        """Route one arena message to shards; indices rebased shard-local.
+
+        Returns ``[(piece, sub_seg), ...]`` — for a dense arena vector,
+        ``piece`` is the shard's contiguous slice (``sub_seg`` None); for
+        a global-index :class:`SparseLeaf`, ``piece`` is the shard's
+        entries with ``indices - bounds[s]`` and ``sub_seg`` its slice of
+        the per-tensor segment table.
+
+        Leaf-aligned specs with ``seg`` split by STATIC slicing (message
+        entries are grouped in leaf order, so each shard's entries are one
+        contiguous run — no host sync, jit-friendly).  Arbitrary bounds
+        fall back to a host-side partition by index range, preserving
+        entry order within each shard and splitting any straddled segment
+        into per-shard sub-counts.  Splitting happens AFTER quantization
+        (values are routed verbatim), so the shard pieces decode bit-equal
+        to the unsharded message under every wire mode.
+        """
+        if not isinstance(msg, SparseLeaf):
+            return [(piece, None) for piece in self.split_dense(msg)]
+        if seg is None:
+            raise ValueError("splitting a sparse arena message needs seg=")
+        if int(msg.size) != self.total:
+            raise ValueError(f"message over a {msg.size}-element arena "
+                             f"cannot split with bounds ending at "
+                             f"{self.total}")
+        if self.leaf_splits is not None:
+            cut = np.cumsum((0,) + tuple(seg))
+            out = []
+            for s in range(self.n_shards):
+                a = int(cut[self.leaf_splits[s]])
+                b = int(cut[self.leaf_splits[s + 1]])
+                out.append((SparseLeaf(
+                    values=msg.values[a:b],
+                    indices=msg.indices[a:b] - jnp.int32(self.bounds[s]),
+                    size=self.bounds[s + 1] - self.bounds[s]),
+                    self.shard_seg(seg, s)))
+            return out
+        # generic bounds: host-side stable partition by owner range
+        vals = np.asarray(msg.values)
+        idx = np.asarray(msg.indices)
+        owner = self.owner_of(idx)
+        seg_id = np.repeat(np.arange(len(seg)), tuple(seg))
+        out = []
+        for s in range(self.n_shards):
+            m = owner == s
+            sub_seg = tuple(int(c) for c in
+                            np.bincount(seg_id[m], minlength=len(seg)))
+            out.append((SparseLeaf(
+                values=jnp.asarray(vals[m]),
+                indices=jnp.asarray((idx[m] - self.bounds[s])
+                                    .astype(np.int32)),
+                size=self.bounds[s + 1] - self.bounds[s]), sub_seg))
+        return out
+
+    def merge(self, pieces):
+        """Inverse of :meth:`split_by_shard`: per-shard pieces (shard
+        order) -> one global arena message, indices rebased back by
+        ``bounds[s]``.  For leaf-aligned splits this reproduces the
+        original message bit-for-bit (same entry order); for generic
+        bounds the entries are grouped by shard but scatter-equivalent
+        (disjoint per-tensor top-k indices are unique, so the dense
+        decode is bit-identical)."""
+        if not any(isinstance(p, SparseLeaf) for p in pieces):
+            return jnp.concatenate([jnp.asarray(p, jnp.float32)
+                                    for p in pieces])
+        vals = [p.values for p in pieces]
+        idxs = [p.indices + jnp.int32(a)
+                for p, a in zip(pieces, self.bounds)]
+        return SparseLeaf(values=jnp.concatenate(vals),
+                          indices=jnp.concatenate(idxs), size=self.total)

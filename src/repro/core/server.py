@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from . import engine as engine_lib
 from .engine import CompressionSpec
-from .paramspace import ParamSpace
+from .paramspace import ParamSpace, ShardSpec
 from .sparsify import SparseLeaf
 
 
@@ -205,3 +205,50 @@ def message_nnz(G) -> int:
     if isinstance(G, SparseLeaf):
         return int(G.values.shape[0])
     return int(jnp.sum(G != 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Sharded parameter server (DESIGN.md §12).  A shard is NOT a new state
+# type: it is a plain ServerState over the sub-arena of the tensors a
+# leaf-aligned ShardSpec assigns to it.  Every per-shard stage is therefore
+# literally the fused single-scatter op above, and because shard index
+# ranges are disjoint, running the shards independently reproduces the
+# single-server arithmetic bit-for-bit (scatter-adds over disjoint ranges
+# commute) while per-shard M/v memory and commit work scale down with S.
+# ---------------------------------------------------------------------------
+
+def shard_params(params, shard_spec: ShardSpec) -> list[list]:
+    """Per-shard leaf lists of a parameter pytree (leaf-aligned spec)."""
+    leaves = jax.tree.leaves(params)
+    return [shard_spec.shard_leaves(leaves, s)
+            for s in range(shard_spec.n_shards)]
+
+
+def init_shards(params, n_workers: int, n_shards: int,
+                shard_spec: ShardSpec | None = None,
+                ) -> tuple[ShardSpec, tuple[ServerState, ...]]:
+    """Range-partition the arena into ``n_shards`` independent servers.
+
+    Returns ``(shard_spec, states)`` where ``states[s]`` is a regular
+    :class:`ServerState` whose arena is shard ``s``'s contiguous index
+    range ``[bounds[s], bounds[s+1])`` of the global arena — M, v, and
+    every derived buffer are per-shard slices.
+    """
+    space = ParamSpace.from_tree(params)
+    if shard_spec is None:
+        shard_spec = ShardSpec.for_space(space, n_shards)
+    if shard_spec.leaf_splits is None:
+        raise ValueError("the sharded server needs a leaf-aligned "
+                         "ShardSpec (ShardSpec.for_space)")
+    states = tuple(init(part, n_workers)
+                   for part in shard_params(params, shard_spec))
+    return shard_spec, states
+
+
+def global_model_shards(params0, states) -> "object":
+    """theta_t from per-shard states: shard M slices concatenate (shard
+    order == leaf order for a leaf-aligned spec) back into the global
+    arena — bit-equal to the single-server :func:`global_model`."""
+    space = ParamSpace.from_tree(params0)
+    M = jnp.concatenate([st.M for st in states if st.space.total])
+    return space.unpack(space.pack(params0) + M)

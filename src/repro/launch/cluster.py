@@ -1,7 +1,8 @@
 """Launch a real multi-process federated cluster over TCP.
 
     PYTHONPATH=src python -m repro.launch.cluster --clients 4 --rounds 20
-    PYTHONPATH=src python -m repro.launch.cluster --smoke
+    PYTHONPATH=src python -m repro.launch.cluster --clients 4 --shards 2
+    PYTHONPATH=src python -m repro.launch.cluster --smoke [--shards 2]
 
 The main process runs the coordinator; each client is a separate OS process
 (``--role client`` re-invocations of this module) connecting over a real
@@ -11,15 +12,26 @@ the identical problem (MLP on the gaussian-blobs task, optionally Dirichlet
 non-IID sharded) from the shared ``--seed``; nothing but wire frames moves
 between them.
 
+``--shards S`` range-partitions the parameter arena across S coordinator
+shards (DESIGN.md §12), each listening on its own port; clients connect to
+every shard (``--ports p0,p1,...``), split each upward frame by index
+range, and merge the per-shard downward diffs.  Sharded runs serve clients
+in a LOCKSTEP round-robin schedule so every shard sees the identical event
+order — which makes an S-shard run reproduce the 1-shard run's losses and
+final parameters bit-for-bit (disjoint-range scatter-adds commute).
+
 ``--smoke`` is the CI guard for the multiprocess path: 2 clients, a few
 int8-quantized rounds, asserts the loss dropped, and exits nonzero on any
-hang (every stage is timeout-bounded).
+hang (every stage is timeout-bounded).  With ``--shards S`` the smoke run
+first serves a 1-shard lockstep reference, then the S-shard run, and
+asserts their losses and final parameters are bit-identical.
 """
 from __future__ import annotations
 
 import argparse
 import subprocess
 import sys
+import threading
 import time
 
 import jax
@@ -94,12 +106,23 @@ def run_client(args):
     from repro.cluster.client import ClusterClient
     from repro.cluster.scenarios import ClientPlan
     from repro.cluster.transport import TcpClientTransport
+    from repro.core.paramspace import ParamSpace, ShardSpec
 
     params0, grad_fn, batch_fn, _ = _problem(args)
-    transport = TcpClientTransport(args.host, args.port, args.client_id,
-                                   connect_timeout=args.timeout)
+    ports = ([int(x) for x in args.ports.split(",")] if args.ports
+             else [args.port])
+    transports = [TcpClientTransport(args.host, pt, args.client_id,
+                                     connect_timeout=args.timeout)
+                  for pt in ports]
+    # every process derives the same ShardSpec from the same params0, so
+    # client-side splitting and coordinator-side ownership always agree
+    shard_spec = (ShardSpec.for_space(ParamSpace.from_tree(params0),
+                                      len(ports))
+                  if len(ports) > 1 else None)
     client = ClusterClient(
-        transport=transport,
+        transport=transports if len(transports) > 1 else transports[0],
+        shard_spec=shard_spec,
+        pin_slot=args.pin_slot,
         strategy=_strategy(args),
         grad_fn=grad_fn,
         params0=params0,
@@ -111,53 +134,132 @@ def run_client(args):
         max_retries=3,
     )
     client.run()
-    transport.close()
+    for t in transports:
+        t.close()
     return 0
 
 
-def run_coordinator(args, *, spawn_clients: bool):
-    from repro.cluster.coordinator import Coordinator
-    from repro.cluster.transport import TcpCoordinatorTransport
+def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
+                   recorder, lockstep: bool | None = None):
+    """One coordinator-side run (1 or S shards); returns (final, hist, dt).
 
-    params0, grad_fn, _, accuracy = _problem(args)
-    recorder = (telemetry.Recorder(args.trace_dir)
-                if args.trace_dir else telemetry.NULL)
-    if recorder.enabled:
-        telemetry.set_recorder(recorder)
-    transport = TcpCoordinatorTransport(args.host, args.port)
-    log.info(f"[coordinator] listening on {transport.host}:{transport.port} "
-             f"({args.clients} clients x {args.rounds} rounds)")
+    ``lockstep`` serves clients in an explicit round-robin schedule
+    (client 0..C-1, repeated ``rounds`` times) instead of arrival order —
+    the determinism sharded runs need so every shard sees the identical
+    event order (and the 1-shard reference a ``--smoke --shards`` run is
+    compared against sees it too).  Defaults to ``n_shards > 1``.
+    """
+    from repro.cluster.coordinator import Coordinator
+    from repro.cluster.transport import (ScheduleDriven,
+                                         TcpCoordinatorTransport)
+    from repro.core.paramspace import ParamSpace, ShardSpec
+
+    if lockstep is None:
+        lockstep = n_shards > 1
+    transports = [TcpCoordinatorTransport(args.host,
+                                          args.port if s == 0 else 0)
+                  for s in range(n_shards)]
+    ports = [t.port for t in transports]
+    log.info(f"[coordinator] listening on {transports[0].host}:"
+             f"{','.join(str(p) for p in ports)} ({args.clients} clients x "
+             f"{args.rounds} rounds, {n_shards} shard(s))")
     procs = []
     if spawn_clients:
         for c in range(args.clients):
             cmd = [sys.executable, "-m", "repro.launch.cluster",
                    "--role", "client", "--client-id", str(c),
-                   "--port", str(transport.port)] + _shared_flags(args)
+                   "--ports", ",".join(str(p) for p in ports)] \
+                + _shared_flags(args)
+            if lockstep:
+                cmd.append("--pin-slot")
             procs.append(subprocess.Popen(cmd))
 
+    shard_spec = (ShardSpec.for_space(ParamSpace.from_tree(params0),
+                                      n_shards)
+                  if n_shards > 1 else None)
     spec = CompressionSpec(engine="exact", quantize=args.secondary_quantize)
-    coordinator = Coordinator(
-        transport=transport,
+    order = np.tile(np.arange(args.clients), args.rounds)
+    coords = [Coordinator(
+        transport=transports[s],
         params0=params0,
         n_slots=args.clients,
         secondary_density=args.secondary_density,
         secondary_spec=spec,
+        scheduler=ScheduleDriven(order) if lockstep else None,
         recv_timeout=args.timeout,
         recorder=recorder,
-    )
+        shard_spec=shard_spec,
+        shard_id=s,
+    ) for s in range(n_shards)]
+
+    results: list = [None] * n_shards
+    errors: list = []
+
+    def _serve(s):
+        try:
+            results[s] = coords[s].serve()
+        except Exception as exc:
+            errors.append(exc)
+
+    shard_threads = [threading.Thread(target=_serve, args=(s,), daemon=True)
+                     for s in range(1, n_shards)]
     t0 = time.perf_counter()
     try:
         with recorder.span("cluster/serve"):
-            final, hist = coordinator.serve()
+            for t in shard_threads:
+                t.start()
+            final, hist = coords[0].serve()
+            for t in shard_threads:
+                t.join(timeout=args.timeout)
+        if errors:
+            raise errors[0]
         dt = time.perf_counter() - t0
     finally:
-        # on any serve() failure, still reap the children + free the port
+        # on any serve() failure, still reap the children + free the ports
         for p in procs:
             try:
                 p.wait(timeout=5)
             except subprocess.TimeoutExpired:
                 p.kill()
-        transport.close()
+        for t in transports:
+            t.close()
+
+    if n_shards > 1:
+        # stitch shard results: shard 0's History is the event log (every
+        # shard served the identical lockstep order), bytes sum across
+        # shards, shard/{i}/* counters merge, per-shard leaves concatenate
+        results[0] = (final, hist)
+        leaves = [leaf for f, _ in results for leaf in jax.tree.leaves(f)]
+        final = jax.tree.unflatten(jax.tree.structure(params0), leaves)
+        counters = dict(hist.metrics["counters"])
+        for _, h in results[1:]:
+            counters.update({k: v for k, v in h.metrics["counters"].items()
+                             if k.startswith("shard/")})
+        hist = hist._replace(
+            up_bytes=sum(h.up_bytes for _, h in results),
+            down_bytes=sum(h.down_bytes for _, h in results),
+            metrics={**hist.metrics, "counters": counters})
+    return final, hist, dt
+
+
+def run_coordinator(args, *, spawn_clients: bool):
+    params0, grad_fn, _, accuracy = _problem(args)
+    recorder = (telemetry.Recorder(args.trace_dir)
+                if args.trace_dir else telemetry.NULL)
+    if recorder.enabled:
+        telemetry.set_recorder(recorder)
+
+    ref_hist = ref_final = None
+    if args.smoke and args.shards > 1:
+        # the bit-parity reference: same problem, same lockstep order,
+        # ONE shard — the sharded run below must reproduce it exactly
+        ref_final, ref_hist, _ = _serve_cluster(
+            args, params0, spawn_clients=spawn_clients, n_shards=1,
+            recorder=telemetry.NULL, lockstep=True)
+
+    final, hist, dt = _serve_cluster(
+        args, params0, spawn_clients=spawn_clients, n_shards=args.shards,
+        recorder=recorder)
 
     n = max(1, len(hist.losses))
     log.info(f"[coordinator] {len(hist.losses)} events in {dt:.1f}s | "
@@ -176,7 +278,17 @@ def run_coordinator(args, *, spawn_clients: bool):
         assert hist.losses[-3:].mean() < hist.losses[:3].mean(), \
             "smoke: loss did not decrease"
         assert hist.up_bytes > 0 and hist.down_bytes > 0
-        log.info("[coordinator] smoke OK")
+        if ref_hist is not None:
+            assert np.array_equal(hist.losses, ref_hist.losses), \
+                "smoke: sharded losses diverged from 1-shard reference"
+            for a, b in zip(jax.tree.leaves(final),
+                            jax.tree.leaves(ref_final)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    "smoke: sharded params diverged from 1-shard reference"
+            log.info(f"[coordinator] smoke OK: {args.shards}-shard run "
+                     f"bit-identical to 1-shard reference")
+        else:
+            log.info("[coordinator] smoke OK")
     return 0
 
 
@@ -197,12 +309,24 @@ def main(argv=None):
     p.add_argument("--role", choices=("auto", "coordinator", "client"),
                    default="auto")
     p.add_argument("--smoke", action="store_true",
-                   help="tiny timeout-guarded 2-process CI run")
+                   help="tiny timeout-guarded multi-process CI run; with "
+                        "--shards S it first runs a 1-shard reference and "
+                        "asserts the sharded run is bit-identical")
     p.add_argument("--clients", type=int, default=4)
     p.add_argument("--rounds", type=int, default=20)
     p.add_argument("--client-id", type=int, default=0)
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=0)
+    p.add_argument("--shards", type=int, default=1,
+                   help="coordinator shards: range-partition the parameter "
+                        "arena across S servers, one port each (lockstep "
+                        "round-robin serving; bit-identical to --shards 1)")
+    p.add_argument("--ports", default=None,
+                   help="client role: comma-separated coordinator shard "
+                        "ports, shard order (overrides --port)")
+    p.add_argument("--pin-slot", action="store_true",
+                   help="client role: claim worker slot == client id "
+                        "(lockstep runs need every shard to agree)")
     p.add_argument("--strategy", default="dgs")
     p.add_argument("--density", type=float, default=0.05)
     p.add_argument("--momentum", type=float, default=0.7)

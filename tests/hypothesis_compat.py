@@ -41,6 +41,13 @@ except ImportError:  # fallback: fixed-example property runner
                 lambda rng: float(rng.uniform(min_value, max_value)),
                 bounds=(min_value, max_value))
 
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))],
+                bounds=(elements[0], elements[-1]))
+
     def given(*strats):
         def deco(fn):
             def wrapper(*args, **kwargs):

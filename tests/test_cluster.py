@@ -224,3 +224,124 @@ def test_fault_policy_accounting_matches_seeded_expectations():
     # duplicate UPs (retransmits that survived) were answered from the
     # reply cache, never re-applied
     assert counters.get("dup", 0) == counters.get("reply_cache_hits", 0)
+
+
+# ---------------------------------------------------------------------------
+# sharded parameter server (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("name,kw,sd,spec", [
+    ("asgd", {}, None, CompressionSpec(engine="exact")),
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}, 0.1,
+     CompressionSpec(engine="exact", quantize="bf16")),
+    ("dgc_async", {"density": 0.2, "momentum": 0.7}, None,
+     CompressionSpec(engine="exact")),
+])
+def test_sharded_inprocess_bit_parity(n_shards, name, kw, sd, spec):
+    """S coordinator shards over disjoint arena ranges reproduce the
+    single-server run bit-for-bit (losses, event order, final params),
+    and the sharded wire bytes match the static per-shard accounting."""
+    from repro.cluster import wire
+    from repro.core.paramspace import ParamSpace, ShardSpec
+
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(3, 24, seed=7, hetero=0.9)
+    strat = make_strategy(name, **kw)
+    f1, h1 = run_inprocess(strat, grad_fn, params0, batch_fn,
+                           schedule=sched, lr=0.03,
+                           secondary_density=sd, secondary_spec=spec)
+    fS, hS = run_inprocess(strat, grad_fn, params0, batch_fn,
+                           schedule=sched, lr=0.03,
+                           secondary_density=sd, secondary_spec=spec,
+                           n_shards=n_shards)
+    np.testing.assert_array_equal(h1.losses, hS.losses)
+    np.testing.assert_array_equal(h1.worker_ids, hS.worker_ids)
+    np.testing.assert_array_equal(h1.staleness, hS.staleness)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(fS)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sparse upward frames have a static size: the sharded run's measured
+    # up bytes must equal the per-shard static accounting exactly
+    space = ParamSpace.from_tree(params0)
+    up_seg = strat.message_seg(space)
+    if up_seg is not None:
+        sspec = ShardSpec.for_space(space, n_shards)
+        per_event = sum(wire.shard_frame_bytes_static(sspec, up_seg,
+                                                      strat.quantize))
+        assert hS.up_bytes == per_event * len(hS.losses)
+        assert h1.up_bytes == (wire.frame_bytes_static(up_seg, space.total,
+                                                       strat.quantize)
+                               * len(h1.losses))
+    # every shard served every event; the balance counters say so
+    counters = hS.metrics["counters"]
+    for s in range(n_shards):
+        assert counters[f"shard/{s}/events"] == len(hS.losses)
+        assert counters[f"shard/{s}/arena_elems"] == \
+            ShardSpec.for_space(space, n_shards).sizes[s]
+
+
+def _run_tcp_lockstep(n_shards, *, rounds=6, clients=3, sd=0.2):
+    """One TCP cluster run serving a lockstep round-robin schedule."""
+    from repro.cluster.transport import ScheduleDriven
+    from repro.core.paramspace import ParamSpace, ShardSpec
+
+    grad_fn, batch_fn, params0 = _problem()
+    strat = make_strategy("dgs", density=0.2, momentum=0.7, quantize="int8")
+    order = np.tile(np.arange(clients), rounds)
+    shard_spec = (ShardSpec.for_space(ParamSpace.from_tree(params0),
+                                      n_shards)
+                  if n_shards > 1 else None)
+    cts = [TcpCoordinatorTransport() for _ in range(n_shards)]
+    coords = [Coordinator(transport=cts[s], params0=params0,
+                          n_slots=clients, secondary_density=sd,
+                          recv_timeout=120.0,
+                          scheduler=ScheduleDriven(order),
+                          shard_spec=shard_spec, shard_id=s)
+              for s in range(n_shards)]
+
+    def client_main(cid):
+        ts = [TcpClientTransport("127.0.0.1", ct.port, cid) for ct in cts]
+        ClusterClient(
+            transport=ts if n_shards > 1 else ts[0],
+            shard_spec=shard_spec, pin_slot=True, strategy=strat,
+            grad_fn=grad_fn, params0=params0, batch_fn=batch_fn,
+            plan=ClientPlan(client_id=cid, n_rounds=rounds), lr=0.05).run()
+        for t in ts:
+            t.close()
+
+    client_threads = [threading.Thread(target=client_main, args=(i,),
+                                       daemon=True) for i in range(clients)]
+    for t in client_threads:
+        t.start()
+    results = [None] * n_shards
+    coord_threads = [threading.Thread(
+        target=lambda s=s: results.__setitem__(s, coords[s].serve()),
+        daemon=True) for s in range(1, n_shards)]
+    for t in coord_threads:
+        t.start()
+    results[0] = coords[0].serve()
+    for t in client_threads + coord_threads:
+        t.join(timeout=60)
+    for ct in cts:
+        ct.close()
+    finals = [r[0] for r in results]
+    if n_shards > 1:
+        leaves = [leaf for f in finals for leaf in jax.tree.leaves(f)]
+        final = jax.tree.unflatten(jax.tree.structure(params0), leaves)
+    else:
+        final = finals[0]
+    return final, [r[1] for r in results]
+
+
+def test_sharded_tcp_bit_parity():
+    """A 2-shard TCP cluster reproduces the 1-shard TCP run bit-for-bit
+    under the same lockstep schedule — real sockets, split frames."""
+    f1, (h1,) = _run_tcp_lockstep(1)
+    f2, hs = _run_tcp_lockstep(2)
+    for h in hs:   # every shard logged the identical event stream
+        np.testing.assert_array_equal(h1.losses, h.losses)
+        np.testing.assert_array_equal(h1.worker_ids, h.worker_ids)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # each shard moved fewer bytes than the whole model's single frame
+    assert all(0 < h.up_bytes < h1.up_bytes for h in hs)

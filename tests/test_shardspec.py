@@ -1,0 +1,241 @@
+"""Sharded arena routing (DESIGN.md §12): ShardSpec construction,
+split_by_shard/merge round trips, the ownership arithmetic shared with
+core/distributed.py's shardedps exchange, and byte-exact sharded frames
+across every engine x wire-quantization mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.cluster import wire
+from repro.core.engine import CompressionSpec
+from repro.core.paramspace import ParamSpace, ShardSpec
+from repro.core.sparsify import SparseLeaf
+
+MODES = ("none", "bf16", "int8", "tern")
+ENGINES = (("exact", {}), ("sampled", {"sample_size": 32}),
+           ("blockwise", {}))
+
+
+def _random_tree(seed: int, n_leaves: int):
+    """A pytree with varied ranks/shapes (dict ordering = leaves order)."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i in range(n_leaves):
+        rank = int(rng.integers(0, 4))
+        shape = tuple(int(rng.integers(1, 7)) for _ in range(rank))
+        tree[f"p{i:02d}"] = jnp.asarray(
+            rng.normal(size=shape), jnp.float32)
+    return tree
+
+
+def _arena_message(space, seed: int, density: float = 0.5,
+                   spec=CompressionSpec(engine="exact")):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(space.total,)), jnp.float32)
+    seg = space.ks(density)
+    return space.select(x, seg, spec), seg
+
+
+def _scatter(msg, total: int) -> np.ndarray:
+    dense = np.zeros(total, np.float32)
+    np.add.at(dense, np.asarray(msg.indices), np.asarray(msg.values))
+    return dense
+
+
+# ---------------------------------------------------------------------------
+# construction properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 8))
+def test_property_even_partition_matches_distributed_rule(total, S):
+    """even() covers [0, total) with disjoint ranges for ANY total % S,
+    and its ownership equals core/distributed.py's `idx // stride`."""
+    spec = ShardSpec.even(total, S)
+    assert spec.total == total and spec.n_shards == S
+    assert sum(spec.sizes) == total
+    assert all(sz >= 0 for sz in spec.sizes)
+    idx = np.arange(total)
+    np.testing.assert_array_equal(
+        spec.owner_of(idx), idx // ShardSpec.even_stride(total, S))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 2 ** 31))
+def test_property_for_space_is_leaf_aligned(n_leaves, S, seed):
+    """Every for_space bound lands on a leaf edge; the shard leaf lists
+    partition the tree's leaves in order (empty shards allowed)."""
+    tree = _random_tree(seed, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    spec = ShardSpec.for_space(space, S)
+    assert spec.total == space.total and spec.n_shards == S
+    assert set(spec.bounds) <= set(space.offsets) | {space.total}
+    leaves = jax.tree.leaves(tree)
+    parts = [spec.shard_leaves(leaves, s) for s in range(S)]
+    flat = [leaf for p in parts for leaf in p]
+    assert len(flat) == len(leaves)
+    for a, b in zip(flat, leaves):
+        assert a is b
+    # per-shard sizes are the summed leaf sizes — shard s IS a sub-arena
+    for s, part in enumerate(parts):
+        assert sum(int(np.prod(x.shape)) if x.shape else 1
+                   for x in part) == spec.sizes[s]
+
+
+# ---------------------------------------------------------------------------
+# split/merge round trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 2 ** 31))
+def test_property_leaf_aligned_split_merge_bitwise(n_leaves, S, seed):
+    """Leaf-aligned split -> merge reproduces the message bit-for-bit in
+    the ORIGINAL entry order, for uneven total % S and empty shards."""
+    tree = _random_tree(seed, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    spec = ShardSpec.for_space(space, S)
+    msg, seg = _arena_message(space, seed % 2 ** 16)
+    pieces = spec.split_by_shard(msg, seg)
+    assert len(pieces) == S
+    recon_seg = []
+    for (piece, sub_seg), size in zip(pieces, spec.sizes):
+        assert int(piece.size) == size
+        assert int(piece.values.shape[0]) == sum(sub_seg)
+        if piece.values.shape[0]:
+            li = np.asarray(piece.indices)
+            assert li.min() >= 0 and li.max() < size
+        recon_seg.extend(sub_seg)
+    assert tuple(recon_seg) == tuple(seg)
+    merged = spec.merge([p for p, _ in pieces])
+    assert int(merged.size) == space.total
+    np.testing.assert_array_equal(np.asarray(merged.values),
+                                  np.asarray(msg.values))
+    np.testing.assert_array_equal(np.asarray(merged.indices),
+                                  np.asarray(msg.indices))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(0, 2 ** 31))
+def test_property_generic_bounds_inside_segments(n_leaves, S, seed):
+    """Arbitrary bounds — including boundaries INSIDE a tensor's segment
+    and empty shards — split any straddled segment into per-shard
+    sub-counts; the merged message scatters to the identical dense
+    update (top-k indices are unique, so order cannot matter)."""
+    tree = _random_tree(seed, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    rng = np.random.default_rng((seed % 2 ** 16) + 1)
+    interior = np.sort(rng.integers(0, space.total + 1, size=S - 1))
+    spec = ShardSpec(bounds=(0, *(int(b) for b in interior), space.total))
+    msg, seg = _arena_message(space, seed % 2 ** 16)
+    pieces = spec.split_by_shard(msg, seg)
+    sub_total = np.zeros(len(seg), np.int64)
+    for (piece, sub_seg), size in zip(pieces, spec.sizes):
+        assert int(piece.values.shape[0]) == sum(sub_seg)
+        if piece.values.shape[0]:
+            li = np.asarray(piece.indices)
+            assert li.min() >= 0 and li.max() < size
+        sub_total += np.asarray(sub_seg)
+    np.testing.assert_array_equal(sub_total, np.asarray(seg))
+    merged = spec.merge([p for p, _ in pieces])
+    np.testing.assert_array_equal(_scatter(merged, space.total),
+                                  _scatter(msg, space.total))
+
+
+def test_split_requires_matching_arena_and_seg():
+    space = ParamSpace.from_tree({"w": jnp.ones((4, 3))})
+    msg, seg = _arena_message(space, 0)
+    with pytest.raises(ValueError):
+        ShardSpec(bounds=(0, 5)).split_by_shard(msg, seg)   # wrong total
+    with pytest.raises(ValueError):
+        ShardSpec.for_space(space, 2).split_by_shard(msg)   # sparse, no seg
+
+
+def test_more_shards_than_leaves_yields_empty_shards():
+    tree = {"b": jnp.ones((3,)), "w": jnp.ones((5, 2))}
+    space = ParamSpace.from_tree(tree)
+    spec = ShardSpec.for_space(space, 5)
+    assert spec.n_shards == 5 and sum(spec.sizes) == space.total
+    assert spec.sizes.count(0) >= 3
+    msg, seg = _arena_message(space, 3)
+    pieces = spec.split_by_shard(msg, seg)
+    for (piece, sub_seg), size in zip(pieces, spec.sizes):
+        if size == 0:
+            assert int(piece.values.shape[0]) == 0 and sum(sub_seg) == 0
+    merged = spec.merge([p for p, _ in pieces])
+    np.testing.assert_array_equal(np.asarray(merged.values),
+                                  np.asarray(msg.values))
+    np.testing.assert_array_equal(np.asarray(merged.indices),
+                                  np.asarray(msg.indices))
+
+
+def test_dense_split_merge_roundtrip():
+    space = ParamSpace.from_tree(_random_tree(11, 4))
+    spec = ShardSpec.even(space.total, 3)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(space.total,)),
+                    jnp.float32)
+    pieces = spec.split_by_shard(x)
+    assert all(sub is None for _, sub in pieces)
+    np.testing.assert_array_equal(
+        np.asarray(spec.merge([p for p, _ in pieces])), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# engine x quantization: sharded frames == unsharded frame, byte-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("engine,extra", ENGINES)
+def test_sharded_frames_bit_and_byte_equal(engine, extra, mode):
+    """encode_sharded_message's shipped pieces merge bit-identical to the
+    single-frame shipped leaf (leaf-aligned shards keep whole tensors, so
+    per-segment quantization scales are unchanged), and each payload's
+    size matches the static shard_frame_bytes_static accounting."""
+    tree = _random_tree(7, 5)
+    space = ParamSpace.from_tree(tree)
+    cspec = CompressionSpec(engine=engine, **extra)
+    msg, seg = _arena_message(space, 9, density=0.4, spec=cspec)
+    _, ship_single = wire.encode_message(wire.UP, 1, 0, [msg],
+                                         mode=mode, seg=seg)
+    for S in (1, 2, 3, 5):
+        spec = ShardSpec.for_space(space, S)
+        frames = wire.encode_sharded_message(wire.UP, 1, 0, msg,
+                                             shard_spec=spec, mode=mode,
+                                             seg=seg)
+        assert len(frames) == S
+        static = wire.shard_frame_bytes_static(spec, seg, mode)
+        shipped_pieces = []
+        for (payload, shipped), nbytes, size in zip(frames, static,
+                                                    spec.sizes):
+            assert len(payload) == nbytes
+            decoded = wire.decode_message(payload)
+            assert int(decoded.leaves[0].size) == size
+            np.testing.assert_array_equal(np.asarray(decoded.leaves[0].values),
+                                          np.asarray(shipped[0].values))
+            shipped_pieces.append(shipped[0])
+        merged = spec.merge(shipped_pieces)
+        np.testing.assert_array_equal(np.asarray(merged.values),
+                                      np.asarray(ship_single[0].values))
+        np.testing.assert_array_equal(np.asarray(merged.indices),
+                                      np.asarray(ship_single[0].indices))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 5), st.integers(0, 2 ** 31),
+       st.sampled_from(MODES))
+def test_property_quantized_split_is_verbatim(n_leaves, S, seed, mode):
+    """Splitting AFTER quantization routes the quantized values verbatim:
+    merge(split(quantize(msg))) == quantize(msg) bit-for-bit under every
+    wire mode (leaf-aligned shards)."""
+    tree = _random_tree(seed, n_leaves)
+    space = ParamSpace.from_tree(tree)
+    spec = ShardSpec.for_space(space, S)
+    msg, seg = _arena_message(space, seed % 2 ** 16)
+    shipped = wire.quantize_message(msg, mode, seg=seg)
+    merged = spec.merge(
+        [p for p, _ in spec.split_by_shard(shipped, seg)])
+    np.testing.assert_array_equal(np.asarray(merged.values),
+                                  np.asarray(shipped.values))
+    np.testing.assert_array_equal(np.asarray(merged.indices),
+                                  np.asarray(shipped.indices))
