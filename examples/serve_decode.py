@@ -1,71 +1,103 @@
-"""Batched serving example: prefill + decode with KV/MLA/SSM caches.
+"""Decode-while-training: a live inference replica fed by sparse diffs.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch minicpm3-4b
+    PYTHONPATH=src python examples/serve_decode.py
 
-Demonstrates the serve path for three cache disciplines: GQA KV cache,
-MiniCPM3's compressed MLA latent cache, and Mamba2's O(1) recurrent state —
-on the reduced configs.
+One process, the whole serve story (DESIGN.md §13): an async DGS
+training run drives the parameter server while an inference replica —
+subscribed over the in-proc transport — answers a batched eval workload
+between diff applies.  The replica never blocks training: the
+coordinator coalesces every committed update into the replica's
+residual cursor and ships ONE re-sparsified ARENA frame per pull, so
+the replica's accuracy climbs *during* the run, lagging the server by a
+bounded number of versions.  At quiesce the replica SYNCs and its model
+is bit-identical to the server's.
+
+The coordinator also appends sparse delta-checkpoints of the live
+arena; the demo restores the chain at the end and checks it too is
+bit-exact.  For the multi-process TCP version of this demo run
+``python -m repro.launch.serve --smoke``; for the standalone mesh
+prefill/decode loop (KV/MLA/SSM caches) run
+``python -m repro.launch.serve --role decode``.
 """
-import argparse
-import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_delta_checkpoint
+from repro.cluster import run_inprocess
+from repro.core import async_sim, make_strategy
+from repro.core.paramspace import ParamSpace
+from repro.data.synthetic import ClassificationTask
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="minicpm3-4b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=24)
-    args = ap.parse_args()
+    task = ClassificationTask(n_features=32, n_classes=8, batch_size=32,
+                              noise=0.6, seed=0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params0 = {"w1": jax.random.normal(k1, (32, 32)) * 0.2,
+               "b1": jnp.zeros((32,)),
+               "w2": jax.random.normal(k2, (32, 8)) * 0.2,
+               "b2": jnp.zeros((8,))}
+    x_eval, y_eval = task.eval_set(256)
 
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=4")
-    import jax
-    import jax.numpy as jnp
+    @jax.jit
+    def logits_fn(p, x):
+        return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
 
-    from repro.configs import get_arch
-    from repro.launch import mesh as mesh_lib
-    from repro.models import decode_step, init_params, prefill
+    def grad_fn(p, batch):
+        x, y = batch
 
-    cfg = get_arch(args.arch).reduced()
-    mesh = mesh_lib.make_mesh((1, jax.device_count()), ("data", "model"))
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    max_len = args.prompt_len + args.gen
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    fe = None
-    if cfg.frontend_tokens:
-        fe = jax.random.normal(jax.random.PRNGKey(2),
-                               (args.batch, cfg.frontend_tokens,
-                                cfg.d_model), cfg.cdtype)
+        def loss(p):
+            lp = jax.nn.log_softmax(logits_fn(p, x))
+            return -jnp.mean(lp[jnp.arange(x.shape[0]), y])
 
-    pf = jax.jit(lambda p, t: prefill(p, t, cfg, frontend_embeds=fe,
-                                      max_len=max_len))
-    dec = jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+        return jax.value_and_grad(loss)(p)
 
-    import time
-    with mesh:
-        t0 = time.perf_counter()
-        logits, caches, _ = pf(params, prompt)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
-        toks = [jnp.argmax(logits[:, -1], -1)]
-        t0 = time.perf_counter()
-        for t in range(args.gen - 1):
-            logits, caches = dec(params, caches, toks[-1][:, None],
-                                 jnp.int32(args.prompt_len + t))
-            toks.append(jnp.argmax(logits[:, 0], -1))
-        jax.block_until_ready(toks[-1])
-        t_decode = time.perf_counter() - t0
-    cache_bytes = sum(l.size * l.dtype.itemsize
-                      for l in jax.tree.leaves(caches))
-    print(f"arch={cfg.name}  prefill={t_prefill*1e3:.1f}ms  "
-          f"decode={t_decode/max(1, args.gen-1)*1e3:.1f}ms/tok  "
-          f"cache={cache_bytes/2**20:.2f}MiB")
-    out = jnp.stack(toks, axis=1)
-    for b in range(min(2, args.batch)):
-        print(f"  seq{b}:", out[b].tolist())
+    def batch_fn(e, k):
+        return task.batch(int(e), int(k))
+
+    trajectory = []
+
+    def decode_fn(params, step):
+        # the replica's "traffic": one batched forward per diff window,
+        # on whatever model version the last applied diff produced
+        acc = float(jnp.mean(
+            jnp.argmax(logits_fn(params, x_eval), -1) == y_eval))
+        trajectory.append(acc)
+        if step % 8 == 0:
+            print(f"  [replica] decode {step:>3}  acc={acc:.3f}")
+
+    sched = async_sim.make_schedule(4, 120, seed=0, hetero=0.8)
+    strat = make_strategy("dgs", density=0.1, momentum=0.7)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print("[train] 4 workers x 120 events, dgs d=0.1; "
+              "1 replica at push-density 0.25, max_staleness 4")
+        final, hist = run_inprocess(
+            strat, grad_fn, params0, batch_fn,
+            schedule=sched, lr=0.1, secondary_density=0.2,
+            n_replicas=1, push_density=0.25, max_staleness=4,
+            replica_decode_fn=decode_fn,
+            ckpt_dir=ckpt_dir, ckpt_every=16)
+
+        arena = np.asarray(ParamSpace.from_tree(params0).pack(final))
+        rep = hist.metrics["replicas"][0]
+        ck, ck_version, _ = load_delta_checkpoint(ckpt_dir)
+
+    print(f"[train]   loss {hist.losses[:3].mean():.4f} -> "
+          f"{hist.losses[-3:].mean():.4f}  "
+          f"({len(hist.losses)} events)")
+    print(f"[replica] acc  {trajectory[0]:.3f} -> {trajectory[-1]:.3f}  "
+          f"over {rep['decodes']} decode boundaries, "
+          f"{rep['diffs']} diffs, {rep['bytes_in']} push bytes")
+    print(f"[replica] final model bit-identical to server: "
+          f"{np.array_equal(rep['arena'], arena)} "
+          f"(version {rep['version']})")
+    print(f"[ckpt]    delta-chain restore bit-identical: "
+          f"{np.array_equal(ck, arena)} (version {ck_version})")
+    assert np.array_equal(rep["arena"], arena)
+    assert np.array_equal(ck, arena)
 
 
 if __name__ == "__main__":

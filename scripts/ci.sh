@@ -1,36 +1,94 @@
 #!/usr/bin/env bash
-# Fast CI path: lint (when ruff is installed), fail on the first broken
-# test, then the fused-arena/scan-runner hot-path smoke, then the
-# timeout-guarded multiprocess socket smoke (the TCP cluster path must not
-# rot off-TPU: coordinator + 2 client processes over real sockets).
-# Full tier-1 sweep (no -x) is what .github/workflows/ci.yml runs.
+# Staged CI driver.  Usage:
+#
+#   scripts/ci.sh [lint|tests|smoke|all] [pytest args...]
+#
+# * lint  — ruff (skipped with a note when not installed)
+# * tests — first-failure tier-1 sweep (extra args go to pytest)
+# * smoke — the timeout-guarded system smokes: fused-arena bench, TCP
+#           cluster, sharded TCP cluster, and the serve fleet (training
+#           coordinator + 1 trainer + 2 TCP inference replicas; asserts
+#           replicas converge to the server model bit-for-bit and the
+#           delta-checkpoint restore matches the live arena).  Report
+#           markdown for every smoke lands in .ci_reports/ (uploaded as
+#           workflow artifacts); scratch telemetry dirs are removed by
+#           the EXIT trap even when a smoke times out or dies mid-run.
+# * all   — the default: lint, tests, smoke.
+#
+# .github/workflows/ci.yml fans these stages out as parallel jobs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-if command -v ruff >/dev/null 2>&1; then
-  ruff check src tests benchmarks scripts
-else
-  echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
-fi
-python -m pytest -q -x "$@"
-# fused arena event loop + lax.scan runner + batched event loop: must
-# beat per-leaf / stay byte-parity-exact / beat serial by >= 1.2x
-# (asserts inside --smoke, which also writes BENCH_scalability.json)
-timeout 600 python -m benchmarks.bench_scalability --smoke
-test -s BENCH_scalability.json || {
-  echo "FAIL: BENCH_scalability.json not written"; exit 1; }
-# telemetry smoke: the same socket smoke with the flight recorder on;
-# the report gate asserts trace.json + events.jsonl were written, parse,
-# and carry the staleness + bytes histograms
-rm -rf .ci_telemetry
-timeout 300 python -m repro.launch.cluster --smoke --trace-dir .ci_telemetry
-python scripts/report.py .ci_telemetry --check >/dev/null
-# sharded TCP smoke: 2 range-partitioned coordinator shards over real
-# sockets; --smoke --shards 2 first runs a 1-shard reference and asserts
-# the sharded losses + final params are bit-identical to it, and the
-# report gate additionally checks the shard/{i} counters rendered
-rm -rf .ci_telemetry_sharded
-timeout 300 python -m repro.launch.cluster --smoke --shards 2 \
-  --trace-dir .ci_telemetry_sharded
-python scripts/report.py .ci_telemetry_sharded --check --expect-shards \
-  >/dev/null
+
+STAGE="${1:-all}"
+if [ $# -gt 0 ]; then shift; fi
+
+REPORTS=.ci_reports
+SCRATCH=(.ci_telemetry .ci_telemetry_sharded .ci_serve_smoke)
+
+cleanup() {
+  rm -rf "${SCRATCH[@]}"
+}
+trap cleanup EXIT
+
+run_lint() {
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks scripts
+  else
+    echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
+  fi
+}
+
+run_tests() {
+  python -m pytest -q -x "$@"
+}
+
+run_smoke() {
+  mkdir -p "$REPORTS"
+  # fused arena event loop + lax.scan runner + batched event loop: must
+  # beat per-leaf / stay byte-parity-exact / beat serial by >= 1.2x
+  # (asserts inside --smoke, which also writes BENCH_scalability.json)
+  timeout 600 python -m benchmarks.bench_scalability --smoke
+  test -s BENCH_scalability.json || {
+    echo "FAIL: BENCH_scalability.json not written"; exit 1; }
+
+  # telemetry smoke: the socket smoke with the flight recorder on; the
+  # report gate asserts trace.json + events.jsonl were written, parse,
+  # and carry the staleness + bytes histograms
+  rm -rf .ci_telemetry
+  timeout 300 python -m repro.launch.cluster --smoke --trace-dir .ci_telemetry
+  python scripts/report.py .ci_telemetry --check \
+    --out "$REPORTS/cluster_smoke.md" >/dev/null
+
+  # sharded TCP smoke: 2 range-partitioned coordinator shards over real
+  # sockets; --smoke --shards 2 first runs a 1-shard reference and asserts
+  # the sharded losses + final params are bit-identical to it, and the
+  # report gate additionally checks the shard/{i} counters rendered
+  rm -rf .ci_telemetry_sharded
+  timeout 300 python -m repro.launch.cluster --smoke --shards 2 \
+    --trace-dir .ci_telemetry_sharded
+  python scripts/report.py .ci_telemetry_sharded --check --expect-shards \
+    --out "$REPORTS/cluster_sharded_smoke.md" >/dev/null
+
+  # serve smoke: coordinator + 1 training client + 2 TCP inference
+  # replica processes; --smoke asserts every replica's final params are
+  # bit-identical to the server model at quiesce and that restoring the
+  # delta-checkpoint chain reproduces the live arena bit for bit.  The
+  # report gate then requires the replica-fleet table (per-replica lag +
+  # push-bytes counters) rendered from the emitted trace.
+  rm -rf .ci_serve_smoke
+  timeout 300 python -m repro.launch.serve --smoke \
+    --trace-dir .ci_serve_smoke/trace --ckpt-dir .ci_serve_smoke/ckpt \
+    --out-dir .ci_serve_smoke/out
+  python scripts/report.py .ci_serve_smoke/trace --check \
+    --expect-replicas 2 --out "$REPORTS/serve_smoke.md" >/dev/null
+}
+
+case "$STAGE" in
+  lint)  run_lint ;;
+  tests) run_tests "$@" ;;
+  smoke) run_smoke ;;
+  all)   run_lint; run_tests "$@"; run_smoke ;;
+  *)     echo "usage: scripts/ci.sh [lint|tests|smoke|all] [pytest args...]"
+         exit 2 ;;
+esac

@@ -197,6 +197,34 @@ def render_shards(events) -> list[str]:
     return out
 
 
+def render_replicas(events) -> list[str]:
+    """Replica-fleet table from the ``sub/{i}/...`` counters a
+    serve-enabled coordinator flushes (DESIGN.md §13): pushes, push
+    bytes, version lag, and final version per inference replica."""
+    counters = (_last(events, "counters") or {}).get("counters", {})
+    per_sub: dict[str, dict[str, float]] = {}
+    for name, v in counters.items():
+        parts = name.split("/")
+        if len(parts) == 3 and parts[0] == "sub":
+            per_sub.setdefault(parts[1], {})[parts[2]] = v
+    if not per_sub:
+        return []
+    cols = sorted({c for fields in per_sub.values() for c in fields})
+    out = ["## Replica fleet", "",
+           "| replica | " + " | ".join(cols) + " |",
+           "|---:|" + "---:|" * len(cols)]
+    for rid in sorted(per_sub, key=lambda r: int(r) if r.isdigit() else 0):
+        fields = per_sub[rid]
+        cells = []
+        for c in cols:
+            v = fields.get(c, 0)
+            cells.append(f"{v:.3f}" if isinstance(v, float)
+                         and not float(v).is_integer() else f"{int(v)}")
+        out.append(f"| {rid} | " + " | ".join(cells) + " |")
+    out.append("")
+    return out
+
+
 def render_report(run_dir: pathlib.Path) -> str:
     trace_events, events = load_run(run_dir)
     summary = _last(events, "run_summary") or {}
@@ -217,6 +245,7 @@ def render_report(run_dir: pathlib.Path) -> str:
     lines += render_stage_breakdown(trace_events)
     lines += render_clients(events)
     lines += render_shards(events)
+    lines += render_replicas(events)
     return "\n".join(lines)
 
 
@@ -232,6 +261,11 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-shards", action="store_true",
                     help="with --check: also require the shard-balance "
                          "table (sharded coordinator runs)")
+    ap.add_argument("--expect-replicas", type=int, default=None,
+                    metavar="N",
+                    help="with --check: also require the replica-fleet "
+                         "table with N replica rows, each carrying pushes "
+                         "+ push_bytes + lag_max counters (serve runs)")
     args = ap.parse_args(argv)
 
     try:
@@ -253,6 +287,17 @@ def main(argv=None) -> int:
                    if f"### {title}" not in report]
         if args.expect_shards and "## Shard balance" not in report:
             missing.append("Shard balance")
+        if args.expect_replicas is not None:
+            if "## Replica fleet" not in report:
+                missing.append("Replica fleet")
+            else:
+                _, events = load_run(args.run_dir)
+                counters = (_last(events, "counters") or {}) \
+                    .get("counters", {})
+                for i in range(args.expect_replicas):
+                    for col in ("pushes", "push_bytes", "lag_max"):
+                        if f"sub/{i}/{col}" not in counters:
+                            missing.append(f"sub/{i}/{col}")
         if missing:
             print(f"report --check: missing sections: {missing}",
                   file=sys.stderr)

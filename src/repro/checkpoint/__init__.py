@@ -1,3 +1,6 @@
 from .checkpoint import load_checkpoint, save_checkpoint
+from .delta import (DeltaCheckpointWriter, compact, load_delta_checkpoint,
+                    read_manifest)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_checkpoint", "save_checkpoint", "DeltaCheckpointWriter",
+           "load_delta_checkpoint", "read_manifest", "compact"]

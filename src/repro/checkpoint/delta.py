@@ -1,0 +1,231 @@
+"""Sparse delta-checkpoints: a base arena plus a chain of committed diffs.
+
+A delta-checkpoint directory holds the live model ARENA (DESIGN.md §8) as
+
+* ``base.npy``     — the f32 ``(total,)`` arena at chain start
+* ``deltas.bin``   — an append-only log of wire-framed state deltas
+* ``manifest.json``— offsets/sizes/versions of every delta, written after
+                     each append (temp file + rename, so a torn append
+                     leaves the previous manifest valid and the log tail
+                     is simply ignored)
+
+Each delta is one :mod:`repro.cluster.wire` DIFF message whose payload the
+codec encodes/decodes verbatim:
+
+* a sparse single-segment ARENA frame carrying ``(index, new value)``
+  pairs with **assignment** semantics — the entries of the arena that
+  changed since the previous checkpoint, at their NEW values.  Restore is
+  a scatter-*set*, never an add, so a restored arena is bit-identical to
+  the recorded one regardless of where the chain is truncated or
+  compacted (no floating-point cancellation can creep in, unlike
+  replaying additive diffs onto a moved base).
+* a dense frame (the codec's DENSE/DENSE_COO auto-pick) when the changed
+  set is large enough that full state is cheaper — semantically a whole-
+  arena assignment, which also makes any dense delta a self-contained
+  restore point.
+
+The writer picks whichever framing is smaller per append.  ``version`` is
+the producer's committed-event count (the cluster coordinator's served
+event counter), carried in the DIFF envelope ``seq`` field; restore can
+truncate the chain at any version, and :func:`compact` folds a chain
+prefix into a new base without touching the bits of later restores.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+
+MANIFEST_FILE = "manifest.json"
+BASE_FILE = "base.npy"
+LOG_FILE = "deltas.bin"
+_FORMAT = 1
+
+
+def _wire():
+    # lazy: keep `import repro.checkpoint` free of the cluster package
+    from repro.cluster import wire
+    return wire
+
+
+class DeltaCheckpointWriter:
+    """Append-only delta-checkpoint chain over a flat f32 arena.
+
+    ``append(arena, version)`` diffs against the previously recorded
+    state, writes one wire-framed delta, and updates the manifest; the
+    restored chain is bit-identical to every recorded state
+    (tests/test_delta_checkpoint.py property suite).
+    """
+
+    def __init__(self, path, base, *, version: int = 0,
+                 meta: dict | None = None):
+        self.path = pathlib.Path(path)
+        os.makedirs(self.path, exist_ok=True)
+        base = np.ascontiguousarray(np.asarray(base, np.float32).reshape(-1))
+        np.save(self.path / BASE_FILE, base)
+        self._prev = base.copy()
+        self.total = int(base.size)
+        self.base_version = int(version)
+        self.meta = dict(meta or {})
+        self._entries: list[dict] = []
+        self._log = open(self.path / LOG_FILE, "wb")
+        self._offset = 0
+        self._write_manifest()
+
+    # -- appending ---------------------------------------------------------
+
+    def append(self, arena, version: int) -> dict:
+        """Record ``arena`` as one committed delta; returns its manifest
+        entry (``{"offset", "nbytes", "version", "k"}``)."""
+        wire = _wire()
+        from repro.core.sparsify import SparseLeaf
+        import jax.numpy as jnp
+
+        arena = np.asarray(arena, np.float32).reshape(-1)
+        if arena.size != self.total:
+            raise ValueError(f"arena size {arena.size} != chain total "
+                             f"{self.total}")
+        # != misses -0.0 vs +0.0 flips (IEEE ==), which is exactly the
+        # equality the restore contract (np.array_equal) is stated in;
+        # NaN != NaN is True, so NaN-poisoned entries always re-record.
+        changed = np.flatnonzero(arena != self._prev)
+        k = int(changed.size)
+        sparse_bytes = wire.arena_frame_bytes((k,) if k else (),
+                                              self.total, "none")
+        dense_bytes = int(wire.dense_frame_bytes(
+            int(np.count_nonzero(arena)), self.total))
+        seq = int(version) & 0xFFFFFFFF
+        if sparse_bytes <= dense_bytes:
+            leaf = SparseLeaf(values=jnp.asarray(arena[changed]),
+                              indices=jnp.asarray(changed.astype(np.int32)),
+                              size=self.total)
+            payload, _ = wire.encode_message(
+                wire.DIFF, wire.COORDINATOR_ID, seq, [leaf],
+                mode="none", seg=(k,) if k else ())
+        else:
+            payload, _ = wire.encode_message(
+                wire.DIFF, wire.COORDINATOR_ID, seq, [arena])
+        self._log.write(payload)
+        self._log.flush()
+        entry = {"offset": self._offset, "nbytes": len(payload),
+                 "version": int(version), "k": k}
+        self._offset += len(payload)
+        self._entries.append(entry)
+        self._prev = arena.copy()
+        self._write_manifest()
+        return entry
+
+    def close(self) -> None:
+        if not self._log.closed:
+            self._log.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _write_manifest(self):
+        manifest = {"format": _FORMAT, "total": self.total,
+                    "base_version": self.base_version, "meta": self.meta,
+                    "deltas": self._entries}
+        tmp = self.path / (MANIFEST_FILE + ".tmp")
+        tmp.write_text(json.dumps(manifest, indent=1))
+        os.replace(tmp, self.path / MANIFEST_FILE)
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+def read_manifest(path) -> dict:
+    manifest = json.loads((pathlib.Path(path) / MANIFEST_FILE).read_text())
+    if manifest.get("format") != _FORMAT:
+        raise ValueError(f"unknown delta-checkpoint format "
+                         f"{manifest.get('format')!r}")
+    return manifest
+
+
+def _apply_delta(arena: np.ndarray, payload: bytes) -> np.ndarray:
+    """Assignment-apply one wire DIFF payload onto ``arena`` (in place)."""
+    wire = _wire()
+    from repro.core.sparsify import SparseLeaf
+
+    msg = wire.decode_message(payload)
+    if msg.type != wire.DIFF or len(msg.leaves) != 1:
+        raise ValueError(f"not a delta frame: type={msg.type} "
+                         f"n_leaves={len(msg.leaves)}")
+    leaf = msg.leaves[0]
+    if isinstance(leaf, SparseLeaf):
+        arena[np.asarray(leaf.indices)] = np.asarray(leaf.values)
+    else:   # dense delta: a whole-arena assignment
+        arena[:] = np.asarray(leaf, np.float32)
+    return arena
+
+
+def load_delta_checkpoint(path, *, upto_version: int | None = None,
+                          upto: int | None = None):
+    """Restore ``(arena, version, meta)`` from a delta-checkpoint dir.
+
+    ``upto`` truncates the chain after the first ``upto`` deltas;
+    ``upto_version`` after the last delta with ``version <= upto_version``
+    (both: the stricter wins).  The restored arena is bit-identical to the
+    producer's arena at that point in the chain.
+    """
+    p = pathlib.Path(path)
+    manifest = read_manifest(p)
+    arena = np.load(p / BASE_FILE).astype(np.float32, copy=True)
+    if arena.size != manifest["total"]:
+        raise ValueError(f"base arena size {arena.size} != manifest total "
+                         f"{manifest['total']}")
+    version = manifest["base_version"]
+    entries = manifest["deltas"]
+    if upto is not None:
+        entries = entries[:max(0, int(upto))]
+    with open(p / LOG_FILE, "rb") as log:
+        for e in entries:
+            if upto_version is not None and e["version"] > upto_version:
+                break
+            log.seek(e["offset"])
+            payload = log.read(e["nbytes"])
+            if len(payload) != e["nbytes"]:
+                raise ValueError(f"torn delta at offset {e['offset']}")
+            _apply_delta(arena, payload)
+            version = e["version"]
+    return arena, version, manifest.get("meta", {})
+
+
+def compact(path, *, upto: int) -> dict:
+    """Fold the first ``upto`` deltas into a new base snapshot.
+
+    The chain's tail (deltas past ``upto``) is preserved byte-for-byte,
+    so every restore point at or past the compaction boundary is
+    bit-identical before and after — assignment semantics make the folded
+    base exactly the arena the dropped prefix restored to.  Returns the
+    rewritten manifest.
+    """
+    p = pathlib.Path(path)
+    manifest = read_manifest(p)
+    upto = max(0, min(int(upto), len(manifest["deltas"])))
+    arena, version, meta = load_delta_checkpoint(p, upto=upto)
+    tail = manifest["deltas"][upto:]
+    with open(p / LOG_FILE, "rb") as log:
+        payloads = []
+        for e in tail:
+            log.seek(e["offset"])
+            payloads.append(log.read(e["nbytes"]))
+    np.save(p / BASE_FILE, arena)
+    offset, entries = 0, []
+    with open(p / LOG_FILE, "wb") as log:
+        for e, payload in zip(tail, payloads):
+            log.write(payload)
+            entries.append({**e, "offset": offset})
+            offset += e["nbytes"]
+    manifest = {"format": _FORMAT, "total": manifest["total"],
+                "base_version": version, "meta": meta, "deltas": entries}
+    tmp = p / (MANIFEST_FILE + ".tmp")
+    tmp.write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp, p / MANIFEST_FILE)
+    return manifest

@@ -10,13 +10,15 @@ dependencies one-directional at import time; ``core.async_sim`` pulls in
 * ``client``      — the worker side
 * ``scenarios``   — federated knobs: plans, participation, Dirichlet shards
 * ``runner``      — assemble coordinator + clients in one process
+* ``subscribe``   — serve leg: per-subscriber residual arenas + DIFF frames
+* ``replica``     — the inference replica loop (decode while training)
 """
 from __future__ import annotations
 
 import importlib
 
 _SUBMODULES = ("wire", "transport", "coordinator", "client", "scenarios",
-               "runner")
+               "runner", "subscribe", "replica")
 
 __all__ = list(_SUBMODULES) + ["run_inprocess"]
 

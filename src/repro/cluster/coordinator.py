@@ -41,7 +41,7 @@ from repro.core import server as ps
 from repro.core.engine import CompressionSpec
 from repro.telemetry import metrics as metrics_lib
 
-from . import wire
+from . import subscribe, wire
 from .transport import RecvTimeout
 
 AUTO_SLOT = 0xFFFFFFFF
@@ -72,6 +72,20 @@ class Coordinator:
     # shard is itself a complete (smaller) parameter arena.
     shard_spec: Any = None             # paramspace.ShardSpec | None
     shard_id: int = 0
+    # serve leg (DESIGN.md §13): inference replicas SUBscribe and PULL
+    # coalesced re-sparsified model-diffs while training runs.
+    # ``push_density`` picks the per-tensor top-k of each push (None =
+    # ship the exact nonzero residual); ``push_spec`` the engine + wire
+    # quantization.  ``min_subscribers`` keeps the coordinator serving
+    # until that many replicas have subscribed AND left — closing the race
+    # where a short schedule quiesces before TCP replicas connect.
+    push_density: float | None = None
+    push_spec: CompressionSpec = engine_lib.EXACT_SPEC
+    min_subscribers: int = 0
+    # delta-checkpoints (checkpoint/delta.py): append the live arena
+    # every ``ckpt_every`` served events (0 = final state only)
+    ckpt_dir: Any = None
+    ckpt_every: int = 0
 
     def __post_init__(self):
         if self.recorder is None:
@@ -114,6 +128,22 @@ class Coordinator:
         # (and therefore of M / each v row) this coordinator holds
         self.counters[f"shard/{self.shard_id}/arena_elems"] = \
             self.sstate.space.total
+        # serve leg state: per-subscriber cursor arenas + the live-arena
+        # delta-checkpoint chain.  theta0's arena is kept on the host so
+        # checkpoint appends are a plain numpy add off the jit hot path.
+        self.book = subscribe.SubscriberBook(
+            self.sstate.space, push_density=self.push_density,
+            push_spec=self.push_spec)
+        self._training_over = False
+        self._theta0_arena = np.asarray(
+            self.sstate.space.pack(self._params0_local), np.float32)
+        self._ckpt = None
+        self._ckpt_last = 0
+        if self.ckpt_dir is not None:
+            from repro.checkpoint import DeltaCheckpointWriter
+            self._ckpt = DeltaCheckpointWriter(
+                self.ckpt_dir, self._theta0_arena, version=0,
+                meta={"n_slots": self.n_slots, "shard_id": self.shard_id})
 
     def _count(self, name: str, n: float = 1):
         self.counters[name] = self.counters.get(name, 0) + n
@@ -184,6 +214,9 @@ class Coordinator:
             self._detach(src)
             self._count("bye")
             return "bye", msg
+        if msg.type in (wire.SUB, wire.PULL, wire.SYNC):
+            self._subscriber_msg(src, msg)
+            return "sub", msg
         if msg.type != wire.UP:
             raise ValueError(f"unexpected {wire.TYPE_NAMES[msg.type]}")
         if len(msg.leaves) != 1:
@@ -277,6 +310,120 @@ class Coordinator:
                       batch=len(ups), loss=self._losses[-1],
                       up_bytes=self.up_bytes, down_bytes=self.down_bytes)
 
+        if self._ckpt is not None and self.ckpt_every and \
+                len(self._losses) - self._ckpt_last >= self.ckpt_every:
+            with rec.span("coord/ckpt", version=len(self._losses)):
+                entry = self._ckpt.append(self._live_arena(),
+                                          len(self._losses))
+            self._ckpt_last = len(self._losses)
+            self._count("ckpt_deltas")
+            self._count("ckpt_bytes", entry["nbytes"])
+
+    def _live_arena(self) -> np.ndarray:
+        """The served model's arena, theta_0 + M, as host f32.
+
+        numpy and XLA:CPU run the same elementwise IEEE-754 add, so this
+        equals ``space.pack(global_model(...))`` bit for bit — the
+        delta-checkpoint chain restores the live model exactly.
+        """
+        return self._theta0_arena + np.asarray(self.sstate.M, np.float32)
+
+    # -- serve leg ---------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        """Server version: committed training events so far (host-side)."""
+        return len(self._losses)
+
+    def _quiesced(self) -> bool:
+        return self._training_over or \
+            (bool(self._joined) and self._joined <= self._left)
+
+    def _subscriber_msg(self, src: int, msg):
+        """Serve one subscriber frame; never touches training state.
+
+        Every reply is a DIFF whose ``seq`` is the server version and
+        whose ``aux`` flags quiescence.  Push bytes land ONLY in the
+        ``sub/{i}/*`` counter family — never ``up_bytes``/``down_bytes``
+        — so schedule-driven runs stay byte-identical to the simulator
+        with or without a fleet attached.
+        """
+        sid = src - wire.SUBSCRIBER_BASE
+        if msg.type == wire.SUB:
+            if src not in self.book.subs:
+                self.book.add(src)
+                self._count("sub_joins")
+            self._push(src, sid)     # the initial catch-up diff (v_sub = 0)
+        elif msg.type == wire.PULL:
+            if src not in self.book.subs:
+                self._count("ignored")
+                return
+            self._push(src, sid)
+        else:  # SYNC: dense full-M handshake, then the replica leaves
+            if src not in self.book.subs:
+                self._count("ignored")
+                return
+            with self.recorder.span("coord/sync", sub=sid):
+                payload = self.book.sync_payload(
+                    src, self.sstate.M, self.version)
+                self.transport.send(src, payload)
+            self._count(f"sub/{sid}/pushes")
+            self._count(f"sub/{sid}/push_bytes", len(payload))
+            self.counters[f"sub/{sid}/version"] = self.version
+            self._count("sub_syncs")
+            self.book.drop(src)
+
+    def _push(self, src: int, sid: int):
+        version = self.version
+        lag = version - self.book.subs[src].version
+        with self.recorder.span("coord/push", sub=sid, lag=lag):
+            payload = self.book.diff_payload(
+                src, self.sstate.M, version, self._quiesced())
+            self.transport.send(src, payload)
+        self._count(f"sub/{sid}/pushes")
+        self._count(f"sub/{sid}/push_bytes", len(payload))
+        self.counters[f"sub/{sid}/lag_max"] = max(
+            self.counters.get(f"sub/{sid}/lag_max", 0), lag)
+        self.counters[f"sub/{sid}/version"] = version
+
+    def _poll_subscribers(self):
+        """Drain pending subscriber traffic without blocking.
+
+        Schedule-driven loops call this between turns; the transport's
+        selective ``poll`` stashes (never consumes) training-client
+        frames, so the served event order is untouched.
+        """
+        poll = getattr(self.transport, "poll", None)
+        if poll is None:
+            return
+        while (got := poll(wire.is_subscriber)) is not None:
+            src, payload = got
+            try:
+                msg = wire.decode_message(payload)
+            except Exception:
+                self._count("ignored")
+                continue
+            self._subscriber_msg(src, msg)
+
+    def _drain_subscribers(self):
+        """Post-training: answer PULLs with quiesced diffs until every
+        subscriber (at least ``min_subscribers`` of them) has SYNCed."""
+        while len(self.book.seen) < self.min_subscribers or self.book.subs:
+            try:
+                src, payload = self.transport.recv(
+                    None, timeout=self.recv_timeout)
+            except RecvTimeout:
+                continue
+            if wire.is_subscriber(src):
+                try:
+                    msg = wire.decode_message(payload)
+                except Exception:
+                    self._count("ignored")
+                    continue
+                self._subscriber_msg(src, msg)
+            else:
+                self._classify(src, payload)   # stray dup/bye traffic
+
     def _account(self, client: int, nbytes: int):
         if self.scheduler is None:
             return
@@ -330,6 +477,7 @@ class Coordinator:
         events = 0
         while max_events is None or events < max_events:
             if self.scheduler is not None:
+                self._poll_subscribers()
                 remaining = None if max_events is None else max_events - events
                 turns = self._next_turns(remaining)
                 if not turns:
@@ -354,12 +502,27 @@ class Coordinator:
                 events += 1
             if self._all_done():
                 break
+        self._training_over = True
+        self._drain_subscribers()
         return self._finish()
 
     def _all_done(self) -> bool:
-        return bool(self._joined) and self._joined <= self._left
+        if not (bool(self._joined) and self._joined <= self._left):
+            return False
+        # a serve-enabled coordinator keeps answering until the fleet has
+        # arrived (min_subscribers) and every live replica has SYNCed out
+        if len(self.book.seen) < self.min_subscribers:
+            return False
+        return not self.book.subs
 
     def _finish(self):
+        if self._ckpt is not None:
+            if self._ckpt_last < len(self._losses):
+                entry = self._ckpt.append(self._live_arena(),
+                                          len(self._losses))
+                self._count("ckpt_deltas")
+                self._count("ckpt_bytes", entry["nbytes"])
+            self._ckpt.close()
         # sharded coordinators return their shard's leaves; the runner /
         # launcher concatenates shard results back into the full pytree
         final = ps.global_model(self._params0_local, self.sstate)

@@ -53,15 +53,33 @@ def run_inprocess(
     timeout: float = 300.0,
     recorder=None,
     n_shards: int = 1,
+    n_replicas: int = 0,
+    push_density: float | None = None,
+    push_spec: CompressionSpec = engine_lib.EXACT_SPEC,
+    max_staleness: int = 4,
+    replica_decode_fn=None,
+    ckpt_dir=None,
+    ckpt_every: int = 0,
 ):
     """Run coordinator + clients on the in-process transport.
 
     Exactly one of ``schedule`` (parity mode) / ``plans`` (scenario mode)
     must be given.  Returns ``(final_params, History)`` like
     ``AsyncTrainer.run`` minus the server state.
+
+    ``n_replicas > 0`` attaches a live inference fleet (DESIGN.md §13):
+    each replica subscribes, pulls re-sparsified model-diffs between
+    decode boundaries, and SYNCs to the bit-exact final model at quiesce.
+    Replica results land in ``History.metrics["replicas"]`` (per-replica
+    stats + final arena); training losses/bytes are untouched — serving
+    reads M only.
     """
     if (schedule is None) == (plans is None):
         raise ValueError("pass exactly one of schedule= or plans=")
+    if n_replicas and n_shards > 1:
+        raise NotImplementedError(
+            "the serve leg subscribes to ONE coordinator arena; sharded "
+            "serving needs per-shard subscriptions (future work)")
     if n_shards > 1:
         if plans is not None:
             raise NotImplementedError(
@@ -117,6 +135,11 @@ def run_inprocess(
         recorder=recorder,
         shard_spec=shard_spec,
         shard_id=0,
+        push_density=push_density,
+        push_spec=push_spec,
+        min_subscribers=n_replicas,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
     )
     # shards 1..S-1: same schedule, own cursor, own endpoint — every shard
     # sees the identical event stream (clients fan each UP out to all of
@@ -172,6 +195,27 @@ def run_inprocess(
         threads.append(t)
         t.start()
 
+    replicas, replica_results = [], [None] * n_replicas
+    replica_threads = []
+    for i in range(n_replicas):
+        from .replica import InferenceReplica
+        r = InferenceReplica(
+            hub.endpoint(wire.SUBSCRIBER_BASE + i), params0,
+            replica_id=i, max_staleness=max_staleness,
+            decode_fn=replica_decode_fn, recorder=recorder,
+            recv_timeout=timeout)
+        replicas.append(r)
+
+        def _serve_replica(i=i, r=r):
+            try:
+                replica_results[i] = r.run()
+            except Exception as exc:
+                errors.append(exc)
+
+        t = threading.Thread(target=_serve_replica, daemon=True)
+        replica_threads.append(t)
+        t.start()
+
     shard_results: list = [None] * n_shards
     coord_errors: list = []
 
@@ -197,6 +241,8 @@ def run_inprocess(
     for t in threads:
         t.join(timeout=timeout)
     for t in shard_threads:
+        t.join(timeout=timeout)
+    for t in replica_threads:
         t.join(timeout=timeout)
     if errors:
         raise errors[0]
@@ -230,4 +276,9 @@ def run_inprocess(
         } for c in clients}
         hist = hist._replace(
             metrics={**hist.metrics, "clients": per_client})
+    if n_replicas and hist.metrics is not None:
+        hist = hist._replace(metrics={**hist.metrics, "replicas": [
+            None if r is None else
+            {"arena": r.arena, "version": r.version, **r.stats}
+            for r in replica_results]})
     return final, hist

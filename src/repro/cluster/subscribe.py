@@ -1,0 +1,146 @@
+"""Subscriber-side state of the serve leg: residual arenas + DIFF framing.
+
+An inference replica is a *read-only worker* (DESIGN.md §13): the
+coordinator keeps a cursor arena ``v_sub`` per subscriber — exactly the
+per-worker ``v_k`` row of the parameter server (Eq. 3/4) — and every push
+ships the re-sparsified residual
+
+    r = M - v_sub
+
+as ONE coalesced ARENA frame.  Committing the *shipped* leaf back into
+``v_sub`` (the same fused scatter as the training commit) makes the
+residual self-correcting: whatever top-k selection or wire quantization
+dropped this push stays in ``M - v_sub`` and rides the next one — DGC-style
+accumulation of everything the subscriber hasn't seen, so a slow replica
+gets one catch-up diff, never a replay.
+
+The final handshake is bit-exact by construction: SYNC answers with the
+FULL accumulated update ``M`` as a dense frame, and the replica computes
+``theta = theta_0 + M`` — the same elementwise f32 add as
+``server.global_model`` — so replica parameters match the server's final
+model bit for bit regardless of what the sparse pushes dropped.
+
+This module owns the per-subscriber state and framing math only; the
+coordinator drives transport, counters, and spans.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as engine_lib
+from repro.core.engine import CompressionSpec
+from repro.core.sparsify import SparseLeaf
+
+from . import wire
+
+
+@dataclasses.dataclass
+class Subscriber:
+    """One replica's cursor state on the coordinator."""
+
+    addr: int
+    v: object            # (total,) f32 cursor arena — what it has seen
+    version: int = 0     # server version its last DIFF brought it to
+    pushes: int = 0
+    push_bytes: int = 0
+    lag_max: int = 0
+    synced: bool = False
+
+
+class SubscriberBook:
+    """Cursor arenas + DIFF/SYNC framing for every live subscriber."""
+
+    def __init__(self, space, *, push_density: float | None = None,
+                 push_spec: CompressionSpec = engine_lib.EXACT_SPEC):
+        self.space = space
+        self.push_density = push_density
+        self.push_spec = push_spec
+        self._select_spec = dataclasses.replace(push_spec, quantize="none")
+        self._ks = (space.ks(push_density)
+                    if push_density is not None else None)
+        self.subs: dict[int, Subscriber] = {}
+        self.seen: set[int] = set()
+
+    def live(self) -> list[int]:
+        return sorted(self.subs)
+
+    def add(self, addr: int) -> Subscriber:
+        """Register ``addr`` with a zero cursor (residual = all of M, so
+        its first DIFF is the full catch-up — same rule as a fresh worker
+        slot)."""
+        sub = Subscriber(addr=addr,
+                         v=jnp.zeros((self.space.total,), jnp.float32))
+        self.subs[addr] = sub
+        self.seen.add(addr)
+        return sub
+
+    def drop(self, addr: int):
+        self.subs.pop(addr, None)
+
+    # -- framing -----------------------------------------------------------
+
+    def _residual_leaf(self, sub: Subscriber):
+        """Re-sparsified residual of everything ``sub`` hasn't seen.
+
+        ``push_density`` set: per-tensor top-|.| of ``M - v_sub`` through
+        the engine registry (static shapes, one jitted program — the
+        training path's own selection).  ``None``: the exact nonzero
+        residual, host-side (dynamic k; serving is off the jit hot path).
+        """
+        r = self._M - sub.v
+        if self._ks is not None:
+            return self.space.select(r, self._ks, self._select_spec), self._ks
+        r_np = np.asarray(r)
+        idx = np.flatnonzero(r_np)
+        leaf = SparseLeaf(values=jnp.asarray(r_np[idx]),
+                          indices=jnp.asarray(idx.astype(np.int32)),
+                          size=self.space.total)
+        return leaf, (int(idx.size),) if idx.size else ()
+
+    def diff_payload(self, addr: int, M, version: int,
+                     quiesced: bool) -> bytes:
+        """One push: encode the residual DIFF and commit the shipped bits.
+
+        ``seq`` carries the server version this diff brings the replica
+        to; ``aux`` is 1.0 once training quiesced (the replica's cue to
+        SYNC).  The SHIPPED leaf — what the decoder reconstructs after
+        wire quantization — is scatter-added into ``v_sub``, so the
+        cursor tracks exactly the bits the replica applied.
+        """
+        sub = self.subs[addr]
+        self._M = M
+        leaf, seg = self._residual_leaf(sub)
+        payload, shipped = wire.encode_message(
+            wire.DIFF, wire.COORDINATOR_ID, version & 0xFFFFFFFF, [leaf],
+            mode=self.push_spec.quantize, seg=seg,
+            aux=1.0 if quiesced else 0.0)
+        ship = shipped[0]
+        if ship.k:
+            from repro.kernels import ops
+            sub.v = ops.scatter_add(sub.v, ship.indices, ship.values)
+        sub.lag_max = max(sub.lag_max, version - sub.version)
+        sub.version = version
+        sub.pushes += 1
+        sub.push_bytes += len(payload)
+        return payload
+
+    def sync_payload(self, addr: int, M, version: int) -> bytes:
+        """The bit-exact final: the full accumulated update, dense.
+
+        The replica reconstructs ``theta_0 + M`` — identical bits to
+        ``server.global_model`` (same elementwise f32 add) — so no sparse
+        push history can leave residue in the served model.
+        """
+        sub = self.subs[addr]
+        payload, _ = wire.encode_message(
+            wire.DIFF, wire.COORDINATOR_ID, version & 0xFFFFFFFF,
+            [np.asarray(M, np.float32)], aux=1.0)
+        sub.lag_max = max(sub.lag_max, version - sub.version)
+        sub.version = version
+        sub.pushes += 1
+        sub.push_bytes += len(payload)
+        sub.synced = True
+        return payload

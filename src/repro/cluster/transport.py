@@ -101,6 +101,27 @@ class _Inbox:
                 return s, payload
             self._stash.setdefault(s, []).append(payload)
 
+    def poll(self, accept):
+        """Non-blocking selective drain: the next message whose *source*
+        satisfies ``accept(src)``, or None.
+
+        Messages from non-accepted sources are stashed — exactly what a
+        selective :meth:`get` would do with them — so polling for (e.g.)
+        subscriber-range traffic never reorders or consumes the frames a
+        schedule-driven receive loop is waiting on.
+        """
+        for s, items in self._stash.items():
+            if items and accept(s):
+                return s, items.pop(0)
+        while True:
+            try:
+                s, payload = self._q.get_nowait()
+            except queue.Empty:
+                return None
+            if accept(s):
+                return s, payload
+            self._stash.setdefault(s, []).append(payload)
+
 
 # ---------------------------------------------------------------------------
 # in-process backend
@@ -139,6 +160,9 @@ class InProcEndpoint:
     def recv(self, src: int | None = None, *,
              timeout: float | None = None) -> tuple[int, bytes]:
         return self.hub._inboxes[self.addr].get(src, timeout)
+
+    def poll(self, accept):
+        return self.hub._inboxes[self.addr].poll(accept)
 
     def close(self) -> None:
         pass
@@ -389,6 +413,9 @@ class TcpCoordinatorTransport:
     def recv(self, src: int | None = None, *,
              timeout: float | None = None) -> tuple[int, bytes]:
         return self._inbox.get(src, timeout)
+
+    def poll(self, accept):
+        return self._inbox.poll(accept)
 
     def close(self) -> None:
         self._closed = True

@@ -68,9 +68,30 @@ from repro.core.sparsify import (SparseLeaf, quantize_parts as
 
 # message types
 HELLO, WELCOME, UP, DOWN, SKIP, BYE = range(6)
+# subscriber leg (DESIGN.md §13): an inference replica SUBscribes to the
+# coordinator, PULLs one coalesced re-sparsified model-diff per decode
+# boundary, and SYNCs (full accumulated update, dense) for the bit-exact
+# final handshake.  Every subscriber-bound reply is a DIFF frame whose
+# ``seq`` field carries the server version (committed event count) the
+# diff brings the replica to, and whose ``aux`` field is 1.0 once
+# training has quiesced (the replica's cue to SYNC and leave).
+SUB, PULL, SYNC, DIFF = 6, 7, 8, 9
 TYPE_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", UP: "UP", DOWN: "DOWN",
-              SKIP: "SKIP", BYE: "BYE"}
+              SKIP: "SKIP", BYE: "BYE", SUB: "SUB", PULL: "PULL",
+              SYNC: "SYNC", DIFF: "DIFF"}
 COORDINATOR_ID = 0xFFFFFFFF
+
+# inference replicas address themselves from a reserved id range so the
+# coordinator can recognize (and selectively drain) subscriber traffic
+# without disturbing the schedule-driven selective receive of training
+# clients — client ids are small ints, shard coordinators sit just under
+# COORDINATOR_ID, and 2**30 collides with neither.
+SUBSCRIBER_BASE = 1 << 30
+
+
+def is_subscriber(addr: int) -> bool:
+    """True when ``addr`` is in the reserved inference-replica id range."""
+    return SUBSCRIBER_BASE <= addr < COORDINATOR_ID - (1 << 16)
 
 # value packing modes (wire codes)
 MODES = {"none": 0, "bf16": 1, "int8": 2, "tern": 3}

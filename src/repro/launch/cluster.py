@@ -29,6 +29,8 @@ asserts their losses and final parameters are bit-identical.
 from __future__ import annotations
 
 import argparse
+import atexit
+import signal
 import subprocess
 import sys
 import threading
@@ -44,6 +46,55 @@ from repro.core.engine import CompressionSpec
 from repro.data.synthetic import ClassificationTask
 
 log = telemetry.get_logger("cluster")
+
+# every child this launcher spawns, so nothing is orphaned when the
+# launcher dies mid-run (e.g. `timeout` sending SIGTERM to a hung smoke —
+# the finally-block cleanup never runs on an unhandled signal)
+_CHILDREN: list[subprocess.Popen] = []
+
+
+def spawn(cmd) -> subprocess.Popen:
+    """``Popen`` tracked for reaping by :func:`reap_children`."""
+    proc = subprocess.Popen(cmd)
+    _CHILDREN.append(proc)
+    return proc
+
+
+def reap_children(timeout: float = 5.0):
+    """Terminate -> wait -> kill every live tracked child."""
+    live = [p for p in _CHILDREN if p.poll() is None]
+    for p in live:
+        try:
+            p.terminate()
+        except OSError:
+            pass
+    deadline = time.monotonic() + timeout
+    for p in live:
+        try:
+            p.wait(timeout=max(0.1, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            p.kill()
+    _CHILDREN.clear()
+
+
+def install_reaper():
+    """Reap children on normal exit AND on SIGTERM/SIGINT.
+
+    ``timeout``(1) kills a hung smoke with SIGTERM; without a handler the
+    client processes (blocked on their sockets) outlive the launcher.
+    The handler re-exits with the conventional 128+signum code.
+    """
+    atexit.register(reap_children)
+
+    def _on_signal(signum, frame):
+        reap_children()
+        sys.exit(128 + signum)
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, _on_signal)
+        except ValueError:
+            pass   # not the main thread (embedded use): atexit still runs
 
 
 def _problem(args):
@@ -172,7 +223,7 @@ def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
                 + _shared_flags(args)
             if lockstep:
                 cmd.append("--pin-slot")
-            procs.append(subprocess.Popen(cmd))
+            procs.append(spawn(cmd))
 
     shard_spec = (ShardSpec.for_space(ParamSpace.from_tree(params0),
                                       n_shards)
@@ -221,6 +272,9 @@ def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
                 p.wait(timeout=5)
             except subprocess.TimeoutExpired:
                 p.kill()
+            finally:
+                if p in _CHILDREN:
+                    _CHILDREN.remove(p)
         for t in transports:
             t.close()
 
@@ -358,6 +412,7 @@ def main(argv=None):
         telemetry.set_level(args.log_level)
     if args.log_file:
         telemetry.set_log_file(args.log_file)
+    install_reaper()
 
     if args.smoke:
         args.clients, args.rounds = 2, 6

@@ -1,0 +1,206 @@
+"""Serve leg: live replicas fed by sparse diffs (DESIGN.md §13).
+
+The contracts under test:
+
+* training parity — attaching a replica fleet changes NOTHING about the
+  training run: losses, final params, and up/down byte accounting stay
+  bit-identical to the simulator (serving reads M, never writes it, and
+  push bytes live in their own counter family);
+* bit-exact quiesce — every replica's final model equals the server's
+  ``global_model`` bit for bit, for top-k pushes, exact-residual pushes,
+  and quantized pushes alike (the dense SYNC handshake, not the sparse
+  push history, carries the guarantee);
+* delta-checkpoints — the coordinator's checkpoint chain restores to the
+  live arena bit for bit;
+* telemetry — per-replica ``sub/{i}/*`` lag/push counters are recorded;
+* the TCP transport path end to end.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_sim, make_strategy
+from repro.core.engine import CompressionSpec
+from repro.core.paramspace import ParamSpace
+from repro.cluster import run_inprocess
+from repro.cluster.client import ClusterClient
+from repro.cluster.coordinator import Coordinator
+from repro.cluster.replica import InferenceReplica
+from repro.cluster.scenarios import ClientPlan
+from repro.cluster.transport import (TcpClientTransport,
+                                     TcpCoordinatorTransport)
+
+
+def _problem():
+    key = jax.random.PRNGKey(0)
+    Wt = jax.random.normal(key, (6, 4))
+
+    def grad_fn(params, batch):
+        x, y = batch
+
+        def loss(p):
+            return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+        return jax.value_and_grad(loss)(params)
+
+    def batch_fn(e, k):
+        kk = jax.random.PRNGKey(int(e) * 131 + int(k) + 1)
+        x = jax.random.normal(kk, (8, 6))
+        return x, x @ Wt
+
+    params0 = {"w": jnp.zeros((6, 4)), "b": jnp.zeros((4,))}
+    return grad_fn, batch_fn, params0
+
+
+def _reference(grad_fn, batch_fn, params0, sched, strat):
+    tr = async_sim.AsyncTrainer(strat, grad_fn, 3, lr=0.03,
+                                secondary_density=0.1)
+    return tr.run(params0, sched, batch_fn)
+
+
+@pytest.mark.parametrize("push_density,push_spec", [
+    (0.3, CompressionSpec(engine="exact")),
+    (None, CompressionSpec(engine="exact")),          # exact residual
+    (0.3, CompressionSpec(engine="exact", quantize="int8")),
+])
+def test_replicas_bit_exact_and_training_untouched(push_density, push_spec):
+    """Fleet attached -> replica finals == server model bitwise, and the
+    training run is bit-identical to the no-fleet simulator reference."""
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(3, 30, seed=7, hetero=0.9)
+    strat = make_strategy("dgs", density=0.2, momentum=0.7)
+    f_sim, _, h_sim = _reference(grad_fn, batch_fn, params0, sched, strat)
+
+    f, h = run_inprocess(strat, grad_fn, params0, batch_fn,
+                         schedule=sched, lr=0.03, secondary_density=0.1,
+                         n_replicas=2, push_density=push_density,
+                         push_spec=push_spec, max_staleness=2, timeout=60)
+
+    np.testing.assert_array_equal(h_sim.losses, h.losses)
+    assert h_sim.up_bytes == h.up_bytes
+    assert h_sim.down_bytes == h.down_bytes
+    for a, b in zip(jax.tree.leaves(f_sim), jax.tree.leaves(f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    final_arena = np.asarray(ParamSpace.from_tree(params0).pack(f))
+    replicas = h.metrics["replicas"]
+    assert len(replicas) == 2
+    for r in replicas:
+        assert r is not None
+        np.testing.assert_array_equal(r["arena"], final_arena)
+        assert r["version"] == len(h.losses)
+        assert r["diffs"] >= 1 and r["bytes_in"] > 0
+
+
+def test_replica_lag_counters_recorded():
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(2, 20, seed=3)
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    _, h = run_inprocess(strat, grad_fn, params0, batch_fn,
+                         schedule=sched, lr=0.03, secondary_density=0.1,
+                         n_replicas=2, push_density=0.25, timeout=60)
+    cnt = h.metrics["counters"]
+    for i in range(2):
+        assert cnt.get(f"sub/{i}/pushes", 0) >= 1
+        assert cnt.get(f"sub/{i}/push_bytes", 0) > 0
+        assert f"sub/{i}/lag_max" in cnt
+        assert cnt.get(f"sub/{i}/version") == len(h.losses)
+    # push traffic must NOT leak into the training byte accounting
+    assert cnt.get("sub_joins") == 2 and cnt.get("sub_syncs") == 2
+
+
+def test_replica_decode_fn_sees_fresh_models():
+    """decode_fn runs at every boundary and the models it sees advance
+    with the training run (version monotonicity through the diffs)."""
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(2, 24, seed=5)
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    seen = []
+
+    def decode_fn(params, step):
+        seen.append(float(jnp.sum(jnp.abs(params["w"]))))
+
+    _, h = run_inprocess(strat, grad_fn, params0, batch_fn,
+                         schedule=sched, lr=0.03, secondary_density=0.1,
+                         n_replicas=1, push_density=0.25,
+                         replica_decode_fn=decode_fn, timeout=60)
+    r = h.metrics["replicas"][0]
+    assert r["decodes"] == len(seen) >= 1
+    # params0 is zeros: any applied diff moves |w| off zero
+    assert seen[-1] > 0 or r["diffs"] <= 1
+
+
+def test_runner_delta_checkpoint_matches_final(tmp_path):
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(2, 16, seed=9)
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    f, h = run_inprocess(strat, grad_fn, params0, batch_fn,
+                         schedule=sched, lr=0.03, secondary_density=0.1,
+                         ckpt_dir=tmp_path / "ckpt", ckpt_every=5,
+                         timeout=60)
+    from repro.checkpoint import load_delta_checkpoint
+    arena, version, _ = load_delta_checkpoint(tmp_path / "ckpt")
+    np.testing.assert_array_equal(
+        arena, np.asarray(ParamSpace.from_tree(params0).pack(f)))
+    assert version == len(h.losses)
+    assert h.metrics["counters"].get("ckpt_deltas", 0) >= 2
+
+
+def test_sharded_serving_rejected():
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(2, 8, seed=1)
+    strat = make_strategy("dgs", density=0.25, momentum=0.7)
+    with pytest.raises(NotImplementedError):
+        run_inprocess(strat, grad_fn, params0, batch_fn, schedule=sched,
+                      n_shards=2, n_replicas=1)
+
+
+def test_tcp_replica_bit_exact():
+    """Real sockets: 2 training clients + 1 replica process-alike thread;
+    the replica's final arena equals the server model bitwise."""
+    grad_fn, batch_fn, params0 = _problem()
+    strat = make_strategy("dgs", density=0.2, momentum=0.7)
+    ct = TcpCoordinatorTransport()
+    coord = Coordinator(transport=ct, params0=params0, n_slots=2,
+                        secondary_density=0.2, recv_timeout=120.0,
+                        push_density=0.3, min_subscribers=1)
+
+    def client_main(cid):
+        t = TcpClientTransport("127.0.0.1", ct.port, cid)
+        ClusterClient(
+            transport=t, strategy=strat, grad_fn=grad_fn, params0=params0,
+            batch_fn=batch_fn, plan=ClientPlan(client_id=cid, n_rounds=6),
+            lr=0.05).run()
+        t.close()
+
+    results = {}
+
+    def replica_main():
+        from repro.cluster import wire
+        t = TcpClientTransport("127.0.0.1", ct.port,
+                               wire.SUBSCRIBER_BASE + 0)
+        results["replica"] = InferenceReplica(
+            t, params0, replica_id=0, max_staleness=2,
+            recv_timeout=120.0).run()
+        t.close()
+
+    threads = [threading.Thread(target=client_main, args=(i,), daemon=True)
+               for i in range(2)]
+    threads.append(threading.Thread(target=replica_main, daemon=True))
+    for t in threads:
+        t.start()
+    final, hist = coord.serve()
+    for t in threads:
+        t.join(timeout=60)
+    ct.close()
+
+    assert len(hist.losses) == 12
+    r = results["replica"]
+    np.testing.assert_array_equal(
+        r.arena, np.asarray(ParamSpace.from_tree(params0).pack(final)))
+    assert r.version == 12
+    cnt = hist.metrics["counters"]
+    assert cnt.get("sub/0/pushes", 0) >= 1
