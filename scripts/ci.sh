@@ -24,7 +24,8 @@ STAGE="${1:-all}"
 if [ $# -gt 0 ]; then shift; fi
 
 REPORTS=.ci_reports
-SCRATCH=(.ci_telemetry .ci_telemetry_sharded .ci_serve_smoke)
+SCRATCH=(.ci_telemetry .ci_telemetry_sharded .ci_telemetry_mesh
+         .ci_serve_smoke)
 
 cleanup() {
   rm -rf "${SCRATCH[@]}"
@@ -69,6 +70,26 @@ run_smoke() {
     --trace-dir .ci_telemetry_sharded
   python scripts/report.py .ci_telemetry_sharded --check --expect-shards \
     --out "$REPORTS/cluster_sharded_smoke.md" >/dev/null
+
+  # device-mesh shard smoke (DESIGN.md §14), under 4 forced host devices
+  # so the alltoallv parity tests' device config is the one CI runs:
+  # (a) the mesh bench gate — bit-parity vs the flat batched server,
+  # mesh runtime vs the S-thread runtime at S=4 — which must land the
+  # mesh_sharded rows in BENCH_scalability.json; (b) a mesh TCP smoke
+  # (ONE port, in-graph shards) asserting bit-identity to the 1-shard
+  # reference INCLUDING measured wire bytes, with the shard-balance
+  # table + route-overflow line rendered from the emitted trace
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    timeout 600 python -m benchmarks.bench_scalability --smoke-mesh
+  grep -q "mesh_sharded/S4" BENCH_scalability.json || {
+    echo "FAIL: mesh_sharded rows missing from BENCH_scalability.json"
+    exit 1; }
+  rm -rf .ci_telemetry_mesh
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    timeout 300 python -m repro.launch.cluster --smoke --mesh-shards 2 \
+    --trace-dir .ci_telemetry_mesh
+  python scripts/report.py .ci_telemetry_mesh --check --expect-shards \
+    --out "$REPORTS/cluster_mesh_smoke.md" >/dev/null
 
   # serve smoke: coordinator + 1 training client + 2 TCP inference
   # replica processes; --smoke asserts every replica's final params are

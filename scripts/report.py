@@ -85,7 +85,13 @@ def render_summary(summary: dict) -> list[str]:
             out.append(f"- **{k}**: {v}")
     metrics = summary.get("metrics") or {}
     counters = metrics.get("counters") or {}
-    run_level = {k: v for k, v in counters.items() if "/" not in k}
+    # route overflow gets its own line (it is a health gate, not traffic):
+    # nonzero means a shard route / bucket capacity slot dropped entries
+    overflow = counters.get("route_overflow", metrics.get("route_overflow"))
+    if overflow is not None:
+        out.append(f"- **route overflow**: {int(overflow)}")
+    run_level = {k: v for k, v in counters.items()
+                 if "/" not in k and k != "route_overflow"}
     if run_level:
         out.append("- **messages**: " + ", ".join(
             f"{k}={int(v)}" for k, v in sorted(run_level.items())))

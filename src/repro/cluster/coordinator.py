@@ -72,6 +72,13 @@ class Coordinator:
     # shard is itself a complete (smaller) parameter arena.
     shard_spec: Any = None             # paramspace.ShardSpec | None
     shard_id: int = 0
+    # device-mesh sharded server (DESIGN.md §14): ONE coordinator hosts
+    # all S shard arenas as a stacked MeshServerState and serves them
+    # through the in-graph alltoallv mesh stages — no shard threads, no
+    # per-shard wire frames, so up/down bytes equal the single-server
+    # reference exactly (the S-thread runtime pays S envelopes instead).
+    # Mutually exclusive with shard_spec/shard_id above.
+    mesh_shards: int = 0
     # serve leg (DESIGN.md §13): inference replicas SUBscribe and PULL
     # coalesced re-sparsified model-diffs while training runs.
     # ``push_density`` picks the per-tensor top-k of each push (None =
@@ -96,11 +103,22 @@ class Coordinator:
                 leaves, self.shard_id)
         else:
             self._params0_local = self.params0
-        self.sstate = ps.init(self._params0_local, self.n_slots)
-        self._batched_server = async_sim.make_batched_server_step(
-            self.secondary_density, self.secondary_spec)
-        self._commit_rows = async_sim.make_batched_commit(
-            self.secondary_density is None)
+        if self.mesh_shards:
+            if self.shard_spec is not None:
+                raise ValueError("mesh_shards and shard_spec are two "
+                                 "different sharding runtimes — pass one")
+            self.sstate = ps.init_mesh_shards(
+                self._params0_local, self.n_slots, self.mesh_shards)
+            self._batched_server = async_sim.make_mesh_batched_server_step(
+                self.secondary_density, self.secondary_spec)
+            self._commit_rows = async_sim.make_mesh_batched_commit(
+                self.secondary_density is None)
+        else:
+            self.sstate = ps.init(self._params0_local, self.n_slots)
+            self._batched_server = async_sim.make_batched_server_step(
+                self.secondary_density, self.secondary_spec)
+            self._commit_rows = async_sim.make_batched_commit(
+                self.secondary_density is None)
         self._down_mode = self.secondary_spec.quantize
         # arena frame segmentation of the sparse downward message (None =
         # dense downward, framed DENSE/DENSE_COO)
@@ -125,9 +143,14 @@ class Coordinator:
         self._up_sizes: list[int] = []
         self._down_sizes: list[int] = []
         # the shard-balance table's size column: how much of the arena
-        # (and therefore of M / each v row) this coordinator holds
-        self.counters[f"shard/{self.shard_id}/arena_elems"] = \
-            self.sstate.space.total
+        # (and therefore of M / each v row) this coordinator holds.  A
+        # mesh coordinator hosts EVERY shard, so it emits all S rows.
+        if self.mesh_shards:
+            for s, sz in enumerate(self.sstate.spec.sizes):
+                self.counters[f"shard/{s}/arena_elems"] = sz
+        else:
+            self.counters[f"shard/{self.shard_id}/arena_elems"] = \
+                self.sstate.space.total
         # serve leg state: per-subscriber cursor arenas + the live-arena
         # delta-checkpoint chain.  theta0's arena is kept on the host so
         # checkpoint appends are a plain numpy add off the jit hot path.
@@ -259,9 +282,16 @@ class Coordinator:
             self._count(f"client/{src}/events")
             self._count(f"client/{src}/up_bytes", len(payload))
             # per-shard counter family: scripts/report.py renders these
-            # as the shard-balance table (one row per coordinator shard)
-            self._count(f"shard/{self.shard_id}/events")
-            self._count(f"shard/{self.shard_id}/up_bytes", len(payload))
+            # as the shard-balance table (one row per coordinator shard;
+            # a mesh coordinator counts every shard's arena as served —
+            # per-shard byte columns don't exist there because the mesh
+            # sends ONE global frame, not S envelopes)
+            if self.mesh_shards:
+                for s in range(self.mesh_shards):
+                    self._count(f"shard/{s}/events")
+            else:
+                self._count(f"shard/{self.shard_id}/events")
+                self._count(f"shard/{self.shard_id}/up_bytes", len(payload))
             e = len(self._losses)
             self._losses.append(float(np.float32(msg.aux)))
             self._served_slots.append(slot)
@@ -299,7 +329,9 @@ class Coordinator:
                 self.down_bytes += len(reply)
                 self._down_sizes.append(len(reply))
                 self._count(f"client/{src}/down_bytes", len(reply))
-                self._count(f"shard/{self.shard_id}/down_bytes", len(reply))
+                if not self.mesh_shards:
+                    self._count(f"shard/{self.shard_id}/down_bytes",
+                                len(reply))
                 self._last_seq[src] = msg.seq
                 self._reply_cache[src] = reply
                 self.transport.send(src, reply)
@@ -319,6 +351,13 @@ class Coordinator:
             self._count("ckpt_deltas")
             self._count("ckpt_bytes", entry["nbytes"])
 
+    def _M_flat(self):
+        """The global ``(total,)`` M arena — mesh states concatenate their
+        masked shard rows back (bit-equal, DESIGN.md §14)."""
+        if self.mesh_shards:
+            return ps.mesh_arena(self.sstate)
+        return self.sstate.M
+
     def _live_arena(self) -> np.ndarray:
         """The served model's arena, theta_0 + M, as host f32.
 
@@ -326,7 +365,7 @@ class Coordinator:
         equals ``space.pack(global_model(...))`` bit for bit — the
         delta-checkpoint chain restores the live model exactly.
         """
-        return self._theta0_arena + np.asarray(self.sstate.M, np.float32)
+        return self._theta0_arena + np.asarray(self._M_flat(), np.float32)
 
     # -- serve leg ---------------------------------------------------------
 
@@ -365,7 +404,7 @@ class Coordinator:
                 return
             with self.recorder.span("coord/sync", sub=sid):
                 payload = self.book.sync_payload(
-                    src, self.sstate.M, self.version)
+                    src, self._M_flat(), self.version)
                 self.transport.send(src, payload)
             self._count(f"sub/{sid}/pushes")
             self._count(f"sub/{sid}/push_bytes", len(payload))
@@ -378,7 +417,7 @@ class Coordinator:
         lag = version - self.book.subs[src].version
         with self.recorder.span("coord/push", sub=sid, lag=lag):
             payload = self.book.diff_payload(
-                src, self.sstate.M, version, self._quiesced())
+                src, self._M_flat(), version, self._quiesced())
             self.transport.send(src, payload)
         self._count(f"sub/{sid}/pushes")
         self._count(f"sub/{sid}/push_bytes", len(payload))
@@ -526,6 +565,11 @@ class Coordinator:
         # sharded coordinators return their shard's leaves; the runner /
         # launcher concatenates shard results back into the full pytree
         final = ps.global_model(self._params0_local, self.sstate)
+        if self.mesh_shards:
+            # ONE host read, off the hot path: how many entries the route
+            # kernel's capacity dropped (0 with the default cap — pinned
+            # by the parity tests)
+            self.counters["route_overflow"] = int(self.sstate.overflow)
         staleness = np.asarray(self._staleness, np.int64)
         metrics = {
             "n_events": len(self._losses),

@@ -16,6 +16,15 @@ shards (DESIGN.md §12): each shard runs its OWN copy of the schedule over
 its own endpoint, clients fan every up-frame out by index range and merge
 the per-shard downward diffs — losses/params reproduce the single-shard
 run bit-for-bit because disjoint-range scatter-adds commute.
+
+``mesh_shards = S`` runs the same range partition as ONE coordinator
+hosting all S shard arenas in-graph (DESIGN.md §14): the stacked mesh
+server stages route every message through the alltoallv exchange, clients
+see a single ordinary endpoint, and both losses/params AND up/down bytes
+reproduce the single-server run bit-for-bit (the S-thread runtime's bytes
+differ — S wire envelopes per event).  Mutually exclusive with
+``n_shards > 1``; works with plans/fault injection like any single
+coordinator.
 """
 from __future__ import annotations
 
@@ -53,6 +62,7 @@ def run_inprocess(
     timeout: float = 300.0,
     recorder=None,
     n_shards: int = 1,
+    mesh_shards: int = 0,
     n_replicas: int = 0,
     push_density: float | None = None,
     push_spec: CompressionSpec = engine_lib.EXACT_SPEC,
@@ -76,10 +86,21 @@ def run_inprocess(
     """
     if (schedule is None) == (plans is None):
         raise ValueError("pass exactly one of schedule= or plans=")
+    if mesh_shards and n_shards > 1:
+        raise ValueError(
+            "n_shards and mesh_shards are two different sharding runtimes "
+            "(S coordinator threads vs one in-graph mesh stage) — pass "
+            "exactly one of them")
     if n_replicas and n_shards > 1:
         raise NotImplementedError(
             "the serve leg subscribes to ONE coordinator arena; sharded "
             "serving needs per-shard subscriptions (future work)")
+    if n_replicas and mesh_shards:
+        raise NotImplementedError(
+            "mesh-sharded serving is a later PR: the subscriber book's "
+            "cursor diffs read a flat M arena, and re-sparsified pushes "
+            "from the stacked mesh state are untested — run replicas "
+            "against an unsharded (or S-thread sharded) coordinator")
     if n_shards > 1:
         if plans is not None:
             raise NotImplementedError(
@@ -135,6 +156,7 @@ def run_inprocess(
         recorder=recorder,
         shard_spec=shard_spec,
         shard_id=0,
+        mesh_shards=mesh_shards,
         push_density=push_density,
         push_spec=push_spec,
         min_subscribers=n_replicas,

@@ -58,6 +58,7 @@ from . import server as ps
 from .baselines import Strategy, msgd_step
 from .engine import CompressionSpec
 from .paramspace import ParamSpace
+from .sparsify import SparseLeaf
 
 
 def make_schedule(
@@ -389,6 +390,113 @@ def make_batched_commit(dense_down: bool):
     else:
         def commit(sstate, ids, G):
             return ps.send_commit_rows(sstate, ids, G)
+    return jax.jit(commit, donate_argnums=(0,))
+
+
+def mesh_batched_server_step_fn(secondary_density, spec: CompressionSpec):
+    """Mesh-sharded twin of :func:`batched_server_step_fn` — same call
+    signature, same outputs, but ``sstate`` is a
+    :class:`server.MeshServerState` and ALL S shard servers run inside
+    this one stage (DESIGN.md §14).
+
+    A sparse upward batch is routed ONCE through the in-graph alltoallv
+    (``distributed.shard_exchange_batch``) before the prefix scan; each
+    scan step then applies one fused per-shard scatter into the stacked
+    ``(S, width)`` M.  Selection happens on the re-concatenated GLOBAL
+    diff through the same ``ParamSpace.select``, so the downward message
+    (and its wire bytes) are bit-identical to the flat server's.
+    """
+    dense_down = secondary_density is None
+    spec_raw = dataclasses.replace(spec, quantize="none")
+
+    def server_batch(sstate, msgs, ids):
+        from repro.core import distributed
+        sspec = sstate.spec
+        S = sspec.n_shards
+        width = sstate.M.shape[1]
+        v_rows = sstate.v[ids]                       # (B, S, width)
+        rows2d = jnp.arange(S, dtype=jnp.int32)[:, None]
+        sparse_up = isinstance(msgs, SparseLeaf)
+        if sparse_up:
+            ri, rv, ovf = distributed.shard_exchange_batch(
+                sspec, msgs.indices, msgs.values)    # (B, S, slots)
+            xs = (ri, rv, v_rows)
+        else:
+            ups = jax.vmap(
+                lambda m: ps.mesh_split(sspec, m, width))(msgs)
+            ovf = jnp.zeros((), jnp.int32)
+            xs = (ups, v_rows)
+
+        def body(carry, x):
+            M, t = carry
+            if sparse_up:
+                ri_b, rv_b, v_k = x
+                # one fused scatter per shard: empty (-1) slots dump into
+                # the padding column width, which is sliced away
+                cols = jnp.where(ri_b >= 0, ri_b, width)
+                Mp = jnp.concatenate(
+                    [M, jnp.zeros((S, 1), M.dtype)], axis=1)
+                M = Mp.at[rows2d, cols].add(-rv_b)[:, :-1]
+            else:
+                up_b, v_k = x
+                M = M - up_b
+            t = t + 1
+            diff_flat = ps.mesh_concat(sspec, M - v_k)
+            if dense_down:
+                out = (diff_flat, M)
+            else:
+                out = (sstate.space.select(
+                    diff_flat, sstate.space.ks(secondary_density),
+                    spec_raw),)
+            return (M, t), out
+
+        (M, t), outs = jax.lax.scan(body, (sstate.M, sstate.t), xs)
+        sstate = sstate._replace(M=M, t=t, overflow=sstate.overflow + ovf)
+        if dense_down:
+            return sstate, outs[0], outs[1]
+        return sstate, outs[0], None
+
+    return server_batch
+
+
+def make_mesh_batched_server_step(secondary_density, spec: CompressionSpec):
+    """jit(mesh batched server); donates ``sstate``."""
+    return jax.jit(mesh_batched_server_step_fn(secondary_density, spec),
+                   donate_argnums=(0,))
+
+
+def make_mesh_batched_commit(dense_down: bool):
+    """Mesh twin of :func:`make_batched_commit` — same call signature.
+
+    Sparse commits route the SHIPPED batch through the same alltoallv as
+    the receive and land in ``v`` with ONE fused 3-D scatter (distinct
+    worker rows x per-shard slots); dense commits snap each ``v`` row to
+    the per-event prefix ``M_rows`` stack.  Donates ``sstate``.
+    """
+    if dense_down:
+        def commit(sstate, ids, G, M_rows):
+            # M_rows: (B, S, width) mesh prefix states; G: (B, total)
+            sstate = sstate._replace(v=sstate.v.at[ids].set(M_rows))
+            return sstate, jnp.sum(G != 0.0, axis=-1)
+    else:
+        def commit(sstate, ids, G):
+            from repro.core import distributed
+            sspec = sstate.spec
+            S = sspec.n_shards
+            width = sstate.v.shape[-1]
+            ri, rv, ovf = distributed.shard_exchange_batch(
+                sspec, G.indices, G.values)          # (B, S, slots)
+            cols = jnp.where(ri >= 0, ri, width)
+            vp = jnp.concatenate(
+                [sstate.v,
+                 jnp.zeros(sstate.v.shape[:2] + (1,), sstate.v.dtype)],
+                axis=2)
+            new_v = vp.at[
+                ids[:, None, None],
+                jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                cols].add(rv)[:, :, :-1]
+            return sstate._replace(v=new_v,
+                                   overflow=sstate.overflow + ovf)
     return jax.jit(commit, donate_argnums=(0,))
 
 

@@ -76,6 +76,9 @@ class ExchangeState(NamedTuple):
     velocity: Any        # SAMomentum velocity pytree (per-worker, local)
     m_shard: Any         # sharded-PS: accumulated update, own shard only
     v_shard: Any         # sharded-PS: what has been broadcast already
+    overflow: Any = ()   # sharded-PS: entries dropped at the W*cap bucket
+                         # slot, () when the mode has no buckets — a
+                         # read-only tap, never fed back into the data plane
 
 
 def init_state(params, cfg: ExchangeConfig, n_workers: int) -> ExchangeState:
@@ -86,9 +89,11 @@ def init_state(params, cfg: ExchangeConfig, n_workers: int) -> ExchangeState:
             return jnp.zeros((shard,), jnp.float32)
         m = jax.tree.map(shard_zeros, params)
         v = jax.tree.map(shard_zeros, params)
+        ovf = jnp.zeros((), jnp.int32)
     else:
         m = v = jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32), params)
-    return ExchangeState(velocity=vel, m_shard=m, v_shard=v)
+        ovf = ()
+    return ExchangeState(velocity=vel, m_shard=m, v_shard=v, overflow=ovf)
 
 
 # ---------------------------------------------------------------------------
@@ -214,7 +219,11 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
     Down:    top-k2 of the difference shard, all-gathered (~W*k2 = k per
              device with the default k2 = k/W).
 
-    Returns (update, u_new, m_new, v_new)."""
+    Returns (update, u_new, m_new, v_new, overflow): ``overflow`` is the
+    scalar int32 count of selected entries dropped at the ``W*cap`` slot
+    this step (their mass stays in the velocity — exactness is never lost,
+    but the count is the telemetry satellite's visibility into how tight
+    ``bucket_factor`` is)."""
     W = n_workers
     S, rest, ax = rows_view(u.shape, shard_axis)
     if ax is None:
@@ -299,7 +308,8 @@ def _leaf_shardedps_hinted(u, g, m_sh, v_sh, *, k, shard_axis, cfg, lr,
     else:
         upd = jnp.moveaxis((-dense / W).reshape(um_shape), 0, ax)
         u_new = jnp.moveaxis(u_new.reshape(um_shape), 0, ax)
-    return upd, u_new, m_new.reshape(-1), v_new.reshape(-1)
+    ovf = jnp.sum(~ok).astype(jnp.int32)
+    return upd, u_new, m_new.reshape(-1), v_new.reshape(-1), ovf
 
 
 def rows_view(shape, shard_axis):
@@ -344,21 +354,28 @@ def shardedps_exchange(
     if shard_axes is None:
         shard_axes = [None] * len(u_leaves)
     upd, new_u, new_m, new_v = [], [], [], []
+    step_ovf = jnp.zeros((), jnp.int32)
     for u, m_sh, v_sh, g, ax in zip(u_leaves, m_leaves, v_leaves, g_leaves,
                                     shard_axes):
         k = density_to_k(int(u.size), cfg.density)
-        up, u2, m2, v2 = _leaf_shardedps_hinted(
+        up, u2, m2, v2, ovf = _leaf_shardedps_hinted(
             u, g, m_sh, v_sh, k=k, shard_axis=ax, cfg=cfg, lr=lr,
             axis_names=axis_names, n_workers=n_workers, spec=spec)
         upd.append(up)
         new_u.append(u2)
         new_m.append(m2)
         new_v.append(v2)
+        step_ovf = step_ovf + ovf
     updates = jax.tree.unflatten(treedef, upd)
+    # states built by older callers carry the defaulted () — start at zero
+    prev = state.overflow
+    base = prev if jax.tree_util.tree_leaves(prev) else jnp.zeros(
+        (), jnp.int32)
     return updates, ExchangeState(
         velocity=jax.tree.unflatten(treedef, new_u),
         m_shard=jax.tree.unflatten(treedef, new_m),
         v_shard=jax.tree.unflatten(treedef, new_v),
+        overflow=base + step_ovf,
     )
 
 
@@ -385,6 +402,98 @@ def _linear_index(axis_names):
     for name in axis_names:
         idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
     return idx
+
+
+# ---------------------------------------------------------------------------
+# mesh-shard alltoallv: the in-graph exchange behind the cluster's
+# `mesh_shards` server stage (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def shard_exchange_batch(spec: ShardSpec, indices, values, *,
+                         cap: int | None = None,
+                         interpret: bool | None = None,
+                         use_mesh: bool | None = None):
+    """Route a batch of global-index sparse messages to shard-local slots.
+
+    ``indices``/``values``: ``(B, k)`` with int32 global arena indices
+    (``-1`` = padding).  Each message is cut into ``S`` even source chunks
+    of ``kp = ShardSpec.even_stride(k, S)`` — one per mesh device — each
+    chunk is bucketed by ``kernels.ops.route_by_shard_batch`` (the same
+    ``owner_of`` partition rule the coordinator sharding uses), and the
+    per-(source, destination) buckets are swapped with one alltoallv-style
+    ``_all_to_all`` over a ``shards`` mesh axis.  With fewer than S local
+    devices the collective degenerates to the bit-identical pure
+    permutation ``swapaxes(src, dst)`` — all_to_all IS that permutation,
+    so the two paths agree bit-for-bit (pinned in tests/test_shardspec.py).
+
+    Capacity rule: ``cap`` bounds entries per (source chunk, destination
+    shard) pair and defaults to ``kp`` — a chunk only holds ``kp`` entries,
+    so the default can NEVER overflow; callers passing a tighter ``cap``
+    trade slots for a nonzero ``overflow`` count.
+
+    ``use_mesh`` picks the path explicitly (tests pin their bit-equality
+    with it); the ``None`` default auto-selects the collective only on a
+    non-CPU backend with >= S devices — forced-host CPU "devices" share
+    the same cores, so the multi-device program would replicate the
+    surrounding stage work S times for zero parallel gain.
+
+    Returns ``(local_idx, vals, overflow)``: ``(B, S, S*cap)`` shard-local
+    indices (``-1`` = empty slot) / values, and the scalar int32 count of
+    entries dropped by ``cap``.
+    """
+    from repro.kernels import ops
+
+    S = spec.n_shards
+    B, k = indices.shape
+    kp = ShardSpec.even_stride(k, S)
+    cap = int(cap) if cap is not None else kp
+    pad = S * kp - k
+    idx3 = jnp.pad(indices.astype(jnp.int32), ((0, 0), (0, pad)),
+                   constant_values=-1).reshape(B, S, kp)
+    val3 = jnp.pad(values, ((0, 0), (0, pad))).reshape(B, S, kp)
+    bounds = jnp.asarray(spec.bounds, jnp.int32)
+
+    if use_mesh is None:
+        use_mesh = (S > 1 and len(jax.devices()) >= S
+                    and jax.default_backend() != "cpu")
+    if use_mesh and S > 1 and len(jax.devices()) >= S:
+        # device-mesh leg: each device routes ITS source chunk and the
+        # buckets cross the fabric with the native collective
+        import numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(jax.devices()[:S]), ("shards",))
+
+        def stage(idx_c, val_c):
+            # (B, 1, kp): this device's source chunk of every message
+            ri_c, rv_c, ovf = ops.route_by_shard_batch(
+                idx_c[:, 0], val_c[:, 0], bounds=bounds, n_shards=S,
+                cap=cap, interpret=interpret)        # (B, S_dst, cap)
+            send_i = jnp.moveaxis(ri_c, 1, 0).reshape(S, B * cap)
+            send_v = jnp.moveaxis(rv_c, 1, 0).reshape(S, B * cap)
+            recv_i = _all_to_all(send_i, "shards")   # (S_src, B * cap)
+            recv_v = _all_to_all(send_v, "shards")
+            ri = jnp.moveaxis(recv_i.reshape(S, B, cap), 1, 0)
+            rv = jnp.moveaxis(recv_v.reshape(S, B, cap), 1, 0)
+            return (ri.reshape(B, 1, S * cap), rv.reshape(B, 1, S * cap),
+                    ovf[None])
+
+        ri, rv, ovf = jax.shard_map(
+            stage, mesh=mesh, axis_names={"shards"},
+            in_specs=(P(None, "shards"), P(None, "shards")),
+            out_specs=(P(None, "shards"), P(None, "shards"), P("shards")),
+            check_vma=False)(idx3, val3)
+        return ri, rv, jnp.sum(ovf).astype(jnp.int32)
+
+    # single-device fallback: route every chunk, then apply the identical
+    # (src, dst) permutation all_to_all performs
+    ri, rv, ovf = ops.route_by_shard_batch(
+        idx3.reshape(B * S, kp), val3.reshape(B * S, kp), bounds=bounds,
+        n_shards=S, cap=cap, interpret=interpret)
+    ri = jnp.swapaxes(ri.reshape(B, S, S, cap), 1, 2)
+    rv = jnp.swapaxes(rv.reshape(B, S, S, cap), 1, 2)
+    return (ri.reshape(B, S, S * cap), rv.reshape(B, S, S * cap),
+            ovf.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

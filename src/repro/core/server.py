@@ -171,7 +171,7 @@ def add_worker(state: ServerState) -> tuple[ServerState, int]:
     """
     new_id = int(state.v.shape[0])
     new_v = jnp.concatenate(
-        [state.v, jnp.zeros((1, state.v.shape[1]), state.v.dtype)])
+        [state.v, jnp.zeros((1,) + state.v.shape[1:], state.v.dtype)])
     return state._replace(v=new_v), new_id
 
 
@@ -194,10 +194,15 @@ def apply_to_params(params, G):
     return space.unpack(apply_update(space.pack(params), G))
 
 
-def global_model(params0, state: ServerState):
-    """theta_t = theta_0 + M_t (Eq. 2) — used by tests and evaluation."""
+def global_model(params0, state):
+    """theta_t = theta_0 + M_t (Eq. 2) — used by tests and evaluation.
+
+    Accepts the flat :class:`ServerState` or the stacked
+    :class:`MeshServerState` (whose padded M concatenates back to the same
+    global arena bit-for-bit)."""
     space = state.space
-    return space.unpack(space.pack(params0) + state.M)
+    M = mesh_arena(state) if isinstance(state, MeshServerState) else state.M
+    return space.unpack(space.pack(params0) + M)
 
 
 def message_nnz(G) -> int:
@@ -252,3 +257,80 @@ def global_model_shards(params0, states) -> "object":
     space = ParamSpace.from_tree(params0)
     M = jnp.concatenate([st.M for st in states if st.space.total])
     return space.unpack(space.pack(params0) + M)
+
+
+# ---------------------------------------------------------------------------
+# Device-mesh sharded server (DESIGN.md §14).  Instead of S host threads
+# each owning a ServerState slice (above), ALL shard arenas live in one
+# stacked (S, width) / (n_workers, S, width) pair so one jitted stage runs
+# every shard server at once — a `shards` mesh axis places the stacks
+# across devices, and global-index messages reach their owner shard via
+# the in-graph alltoallv route (`distributed.shard_exchange_batch`).
+# Rows are padded to a common width and masked at the true shard bounds:
+# padding columns hold zeros, are never routed to (local indices are
+# < sizes[s] by construction), and are sliced away by `mesh_concat` —
+# so ragged and empty shards stay legal and the arithmetic is bit-equal
+# to the flat server.
+# ---------------------------------------------------------------------------
+
+class MeshServerState(NamedTuple):
+    M: jax.Array        # (S, width) f32, row s = shard s's arena, padded
+    v: jax.Array        # (n_workers, S, width) f32
+    t: jax.Array        # scalar int32 update timestamp
+    overflow: jax.Array  # scalar int32 route-capacity drops (0 with the
+                         # default cap — see shard_exchange_batch)
+    space: ParamSpace   # static GLOBAL arena descriptor
+    spec: ShardSpec     # static range partition (registered-static)
+
+
+def mesh_width(spec: ShardSpec) -> int:
+    """Common padded row width: ``even_stride`` unless a leaf-aligned
+    shard is bigger (``for_space`` keeps tensors whole, so a shard may
+    exceed the even stride)."""
+    return max([ShardSpec.even_stride(spec.total, spec.n_shards),
+                *spec.sizes])
+
+
+def init_mesh_shards(params, n_workers: int, n_shards: int,
+                     shard_spec: ShardSpec | None = None) -> MeshServerState:
+    """Stacked mesh twin of :func:`init_shards` — one state, all shards."""
+    space = ParamSpace.from_tree(params)
+    if shard_spec is None:
+        shard_spec = ShardSpec.for_space(space, n_shards)
+    if shard_spec.leaf_splits is None:
+        raise ValueError("the mesh-sharded server needs a leaf-aligned "
+                         "ShardSpec (ShardSpec.for_space)")
+    if shard_spec.total != space.total:
+        raise ValueError("shard_spec does not cover the parameter arena")
+    w = mesh_width(shard_spec)
+    S = shard_spec.n_shards
+    return MeshServerState(
+        M=jnp.zeros((S, w), jnp.float32),
+        v=jnp.zeros((n_workers, S, w), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+        space=space,
+        spec=shard_spec)
+
+
+def mesh_split(spec: ShardSpec, x, width: int | None = None) -> jax.Array:
+    """Cut one global ``(total,)`` arena vector into the padded ``(S,
+    width)`` stack (static slices; padding columns zero)."""
+    width = mesh_width(spec) if width is None else width
+    rows = [jnp.pad(x[a:b], (0, width - (b - a)))
+            for a, b in zip(spec.bounds[:-1], spec.bounds[1:])]
+    return jnp.stack(rows)
+
+
+def mesh_concat(spec: ShardSpec, xs) -> jax.Array:
+    """Undo :func:`mesh_split`: mask each row at its true shard bound and
+    concatenate (shard order == leaf order) back to ``(total,)``."""
+    parts = [xs[s, :sz] for s, sz in enumerate(spec.sizes) if sz]
+    if not parts:
+        return jnp.zeros((0,), xs.dtype)
+    return jnp.concatenate(parts)
+
+
+def mesh_arena(state: MeshServerState) -> jax.Array:
+    """The global M arena of a mesh state (checkpoints / serving / eval)."""
+    return mesh_concat(state.spec, state.M)

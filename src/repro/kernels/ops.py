@@ -207,3 +207,77 @@ def scatter_apply_rows(dense2d, idx2d, vals2d, *, cap: int | None = None,
                                      vals3d, offs3d, interpret=interpret)
     out = out.reshape(n_rows, -1) + spill
     return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# shard routing — the in-graph half of the alltoallv exchange
+# ---------------------------------------------------------------------------
+
+def route_by_shard(indices, values, *, bounds, n_shards: int, cap: int,
+                   interpret: bool | None = None):
+    """Bucket one global-index sparse message into per-shard slots.
+
+    ``indices``: ``(k,)`` int32 global arena indices (``-1`` marks padding);
+    ``values``: ``(k,)``.  ``bounds`` is the ``(S+1,)`` ascending
+    ``ShardSpec.bounds`` array; ownership is the in-graph twin of the
+    host-side ``ShardSpec.owner_of`` (``searchsorted(bounds, i, "right")-1``,
+    so duplicate bounds from empty shards resolve to the non-empty owner).
+
+    Returns ``(local_idx, vals, overflow)``: ``(S, cap)`` shard-LOCAL
+    indices (``-1`` = empty slot) and values, plus a scalar int32 count of
+    real entries dropped because their shard already held ``cap`` — callers
+    that need exactness must size ``cap >= k`` (or prove a tighter bound,
+    see ``distributed.shard_exchange_batch``).
+
+    The slot math is the same stable sort + rank idiom as
+    :func:`_bucket_blocked`; the value placement funnels through
+    :func:`scatter_add`, so on TPU it is the blocked Pallas scatter and
+    elsewhere a single XLA scatter.
+    """
+    ri, rv, ovf = route_by_shard_batch(indices[None], values[None],
+                                       bounds=bounds, n_shards=n_shards,
+                                       cap=cap, interpret=interpret)
+    return ri[0], rv[0], ovf
+
+
+def route_by_shard_batch(indices, values, *, bounds, n_shards: int, cap: int,
+                         interpret: bool | None = None):
+    """Batched :func:`route_by_shard` over ``(N, k)`` chunks with ONE
+    scatter dispatch.
+
+    Rather than vmapping the scatter (which would trace N pallas_calls on
+    TPU), every chunk's slots are offset by ``chunk * (S*cap + 1)`` into a
+    single flat buffer — one kernel launch routes the whole batch.
+    Returns ``(local_idx, vals, overflow)`` shaped ``(N, S, cap)`` /
+    ``(N, S, cap)`` / scalar.
+    """
+    S = int(n_shards)
+    cap = int(cap)
+    n, k = indices.shape
+    bounds = jnp.asarray(bounds, jnp.int32)
+    # padding entries (-1) route to the virtual shard S and are dropped
+    owner = jnp.where(
+        indices < 0, jnp.int32(S),
+        jnp.searchsorted(bounds, indices, side="right").astype(jnp.int32) - 1)
+    order = jnp.argsort(owner, axis=1, stable=True)
+    o_s = jnp.take_along_axis(owner, order, axis=1)
+    i_s = jnp.take_along_axis(indices, order, axis=1)
+    v_s = jnp.take_along_axis(values, order, axis=1).astype(jnp.float32)
+    first = jax.vmap(
+        lambda o: jnp.searchsorted(o, o, side="left"))(o_s).astype(jnp.int32)
+    rank = jnp.arange(k, dtype=jnp.int32)[None, :] - first
+    real = o_s < S
+    ok = (rank < cap) & real
+    row_len = S * cap + 1  # one dump slot per chunk
+    slot = jnp.where(ok, o_s * cap + rank, S * cap)
+    local = i_s - bounds[jnp.clip(o_s, 0, S - 1)]
+    flat = (slot + jnp.arange(n, dtype=jnp.int32)[:, None] * row_len).reshape(-1)
+    rv = scatter_add(jnp.zeros((n * row_len,), jnp.float32), flat,
+                     jnp.where(ok, v_s, 0.0).reshape(-1),
+                     interpret=interpret)
+    rv = rv.reshape(n, row_len)[:, :-1].reshape(n, S, cap)
+    ri = jnp.full((n * row_len,), -1, jnp.int32).at[flat].set(
+        jnp.where(ok, local, -1).reshape(-1))
+    ri = ri.reshape(n, row_len)[:, :-1].reshape(n, S, cap)
+    overflow = jnp.sum(real & (rank >= cap)).astype(jnp.int32)
+    return ri, rv, overflow

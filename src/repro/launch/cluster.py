@@ -20,11 +20,21 @@ in a LOCKSTEP round-robin schedule so every shard sees the identical event
 order — which makes an S-shard run reproduce the 1-shard run's losses and
 final parameters bit-for-bit (disjoint-range scatter-adds commute).
 
+``--mesh-shards S`` runs the same range partition as ONE coordinator
+hosting all S shard arenas in-graph (DESIGN.md §14): the stacked mesh
+server stages route every message through the alltoallv exchange, clients
+connect to a single ordinary port, and both losses/params AND measured
+wire bytes reproduce the unsharded run bit-for-bit.  Uses one JAX device
+per shard when available (``XLA_FLAGS=--xla_force_host_platform_device_``
+``count=S`` on CPU); otherwise the bit-identical single-device fallback.
+Mutually exclusive with ``--shards``.
+
 ``--smoke`` is the CI guard for the multiprocess path: 2 clients, a few
 int8-quantized rounds, asserts the loss dropped, and exits nonzero on any
-hang (every stage is timeout-bounded).  With ``--shards S`` the smoke run
-first serves a 1-shard lockstep reference, then the S-shard run, and
-asserts their losses and final parameters are bit-identical.
+hang (every stage is timeout-bounded).  With ``--shards S`` (or
+``--mesh-shards S``) the smoke run first serves a 1-shard lockstep
+reference, then the sharded run, and asserts their losses and final
+parameters are bit-identical (for mesh runs, the measured bytes too).
 """
 from __future__ import annotations
 
@@ -191,14 +201,18 @@ def run_client(args):
 
 
 def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
-                   recorder, lockstep: bool | None = None):
+                   recorder, lockstep: bool | None = None,
+                   mesh_shards: int = 0):
     """One coordinator-side run (1 or S shards); returns (final, hist, dt).
 
     ``lockstep`` serves clients in an explicit round-robin schedule
     (client 0..C-1, repeated ``rounds`` times) instead of arrival order —
     the determinism sharded runs need so every shard sees the identical
     event order (and the 1-shard reference a ``--smoke --shards`` run is
-    compared against sees it too).  Defaults to ``n_shards > 1``.
+    compared against sees it too).  Defaults to ``n_shards > 1`` or
+    ``mesh_shards > 0``.  ``mesh_shards = S`` keeps ONE transport/port and
+    hands the S-way range partition to the coordinator's in-graph mesh
+    stages (clients are oblivious).
     """
     from repro.cluster.coordinator import Coordinator
     from repro.cluster.transport import (ScheduleDriven,
@@ -206,7 +220,7 @@ def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
     from repro.core.paramspace import ParamSpace, ShardSpec
 
     if lockstep is None:
-        lockstep = n_shards > 1
+        lockstep = n_shards > 1 or mesh_shards > 0
     transports = [TcpCoordinatorTransport(args.host,
                                           args.port if s == 0 else 0)
                   for s in range(n_shards)]
@@ -241,6 +255,7 @@ def _serve_cluster(args, params0, *, spawn_clients: bool, n_shards: int,
         recorder=recorder,
         shard_spec=shard_spec,
         shard_id=s,
+        mesh_shards=mesh_shards,
     ) for s in range(n_shards)]
 
     results: list = [None] * n_shards
@@ -304,16 +319,16 @@ def run_coordinator(args, *, spawn_clients: bool):
         telemetry.set_recorder(recorder)
 
     ref_hist = ref_final = None
-    if args.smoke and args.shards > 1:
+    if args.smoke and (args.shards > 1 or args.mesh_shards > 0):
         # the bit-parity reference: same problem, same lockstep order,
-        # ONE shard — the sharded run below must reproduce it exactly
+        # ONE unsharded server — the sharded run below must reproduce it
         ref_final, ref_hist, _ = _serve_cluster(
             args, params0, spawn_clients=spawn_clients, n_shards=1,
             recorder=telemetry.NULL, lockstep=True)
 
     final, hist, dt = _serve_cluster(
         args, params0, spawn_clients=spawn_clients, n_shards=args.shards,
-        recorder=recorder)
+        recorder=recorder, mesh_shards=args.mesh_shards)
 
     n = max(1, len(hist.losses))
     log.info(f"[coordinator] {len(hist.losses)} events in {dt:.1f}s | "
@@ -339,7 +354,16 @@ def run_coordinator(args, *, spawn_clients: bool):
                             jax.tree.leaves(ref_final)):
                 assert np.array_equal(np.asarray(a), np.asarray(b)), \
                     "smoke: sharded params diverged from 1-shard reference"
-            log.info(f"[coordinator] smoke OK: {args.shards}-shard run "
+            if args.mesh_shards > 0:
+                # the mesh contract is stronger: one coordinator, one wire
+                # frame per event — measured bytes match the reference too
+                assert (hist.up_bytes, hist.down_bytes) == \
+                    (ref_hist.up_bytes, ref_hist.down_bytes), \
+                    "smoke: mesh-sharded bytes diverged from reference"
+                label = f"{args.mesh_shards}-mesh-shard"
+            else:
+                label = f"{args.shards}-shard"
+            log.info(f"[coordinator] smoke OK: {label} run "
                      f"bit-identical to 1-shard reference")
         else:
             log.info("[coordinator] smoke OK")
@@ -375,6 +399,12 @@ def main(argv=None):
                    help="coordinator shards: range-partition the parameter "
                         "arena across S servers, one port each (lockstep "
                         "round-robin serving; bit-identical to --shards 1)")
+    p.add_argument("--mesh-shards", type=int, default=0,
+                   help="in-graph device-mesh shards: ONE coordinator runs "
+                        "all S shard arenas inside a single shard_mapped "
+                        "server stage (DESIGN.md §14); one port, clients "
+                        "unchanged, bytes AND losses bit-identical to the "
+                        "unsharded run (exclusive with --shards)")
     p.add_argument("--ports", default=None,
                    help="client role: comma-separated coordinator shard "
                         "ports, shard order (overrides --port)")
@@ -408,6 +438,10 @@ def main(argv=None):
     p.add_argument("--log-file", default=None,
                    help="mirror launcher output (timestamped) to a file")
     args = p.parse_args(argv)
+    if args.mesh_shards and args.shards > 1:
+        p.error("--shards and --mesh-shards are two different sharding "
+                "runtimes (S coordinator processes vs one in-graph mesh "
+                "stage) — pass exactly one of them")
     if args.log_level:
         telemetry.set_level(args.log_level)
     if args.log_file:

@@ -54,12 +54,17 @@ def _state_abstract(cfg: mcfg.ModelConfig, ex_cfg: ExchangeConfig,
         ]
         m = jax.tree.unflatten(treedef, shards)
         v = jax.tree.unflatten(treedef, shards)
+        # per-worker route-overflow counter (core/distributed.py threads it
+        # through shardedps_exchange); other modes carry the empty default
+        ovf = jax.ShapeDtypeStruct((n_workers,), jnp.int32)
     else:
         m = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct((n_workers, 0), jnp.float32),
             params_shape)
         v = m
-    return ExchangeState(velocity=velocity, m_shard=m, v_shard=v)
+        ovf = ()
+    return ExchangeState(velocity=velocity, m_shard=m, v_shard=v,
+                         overflow=ovf)
 
 
 def init_exchange_state(params, ex_cfg: ExchangeConfig, n_workers: int,
@@ -143,7 +148,9 @@ def build_train_step(cfg: mcfg.ModelConfig, mesh, ex_cfg: ExchangeConfig,
     state_shardings = ExchangeState(
         velocity=vel_shardings,
         m_shard=jax.tree.map(lambda _: flat_sharding, params_shape),
-        v_shard=jax.tree.map(lambda _: flat_sharding, params_shape))
+        v_shard=jax.tree.map(lambda _: flat_sharding, params_shape),
+        overflow=(NamedSharding(mesh, P(data_axes))
+                  if ex_cfg.mode == "shardedps" else ()))
     batch_shardings = jax.tree.map(
         lambda l: NamedSharding(
             mesh, P(*((data_axes,) + (None,) * (l.ndim - 1))) if l.ndim

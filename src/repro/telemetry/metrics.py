@@ -55,6 +55,10 @@ class MetricsState(NamedTuple):
     up_nnz_hist: jax.Array    # (N_BINS,) int32 — shipped upward nnz
     down_nnz_hist: jax.Array  # (N_BINS,) int32 — shipped downward nnz
     mag_hist: jax.Array       # (MAG_BINS,) int32 — |G|^2 exponent buckets
+    overflow: jax.Array       # () int32 — route/bucket entries dropped at
+                              # a capacity slot (shard route kernel,
+                              # shardedps W*cap bucket); 0 unless a caller
+                              # tightens capacity below the safe bound
 
 
 def init(n_workers: int) -> MetricsState:
@@ -65,6 +69,7 @@ def init(n_workers: int) -> MetricsState:
         up_nnz_hist=jnp.zeros((N_BINS,), jnp.int32),
         down_nnz_hist=jnp.zeros((N_BINS,), jnp.int32),
         mag_hist=jnp.zeros((MAG_BINS,), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
     )
 
 
@@ -102,12 +107,13 @@ def msg_sqnorm(msg):
 
 
 def update(ms: MetricsState, worker_ids, staleness, up_nnz, down_nnz,
-           mag_sq) -> MetricsState:
+           mag_sq, overflow=0) -> MetricsState:
     """Fold one event (scalars) or one batch (``(B,)`` arrays) in.
 
     Pure jnp scatter-adds — duplicate histogram buckets within a batch
     accumulate, so the result is identical to folding events one at a
-    time (integer addition commutes).
+    time (integer addition commutes).  ``overflow`` is the step's dropped
+    route/bucket entry count (scalar or per-event array; summed in).
     """
     wid = jnp.asarray(worker_ids, jnp.int32)
     n = 1 if wid.ndim == 0 else int(wid.shape[0])
@@ -118,6 +124,8 @@ def update(ms: MetricsState, worker_ids, staleness, up_nnz, down_nnz,
         up_nnz_hist=ms.up_nnz_hist.at[log2_bin(up_nnz)].add(1),
         down_nnz_hist=ms.down_nnz_hist.at[log2_bin(down_nnz)].add(1),
         mag_hist=ms.mag_hist.at[mag_bin(mag_sq)].add(1),
+        overflow=ms.overflow + jnp.sum(
+            jnp.asarray(overflow, jnp.int32)).astype(jnp.int32),
     )
 
 
@@ -170,6 +178,7 @@ def drain(ms: MetricsState) -> dict:
         "up_nnz_hist": hist_dict(ms.up_nnz_hist),
         "down_nnz_hist": hist_dict(ms.down_nnz_hist),
         "update_mag_hist": hist_dict(ms.mag_hist, labeler=_mag_label),
+        "route_overflow": int(ms.overflow),
     }
 
 

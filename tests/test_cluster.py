@@ -345,3 +345,80 @@ def test_sharded_tcp_bit_parity():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # each shard moved fewer bytes than the whole model's single frame
     assert all(0 < h.up_bytes < h1.up_bytes for h in hs)
+
+
+# ---------------------------------------------------------------------------
+# device-mesh shard servers (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_shards", [2, 4])
+@pytest.mark.parametrize("name,kw,sd,spec", [
+    ("asgd", {}, None, CompressionSpec(engine="exact")),
+    ("dgs", {"density": 0.2, "momentum": 0.7, "quantize": "int8"}, 0.1,
+     CompressionSpec(engine="exact", quantize="bf16")),
+    ("dgs", {"density": 0.2, "momentum": 0.7, "engine": "sampled",
+             "quantize": "bf16"}, None, CompressionSpec(engine="exact")),
+    ("dgs", {"density": 0.2, "momentum": 0.7, "engine": "blockwise",
+             "quantize": "tern"}, 0.2, CompressionSpec(engine="exact")),
+    ("dgc_async", {"density": 0.2, "momentum": 0.7}, None,
+     CompressionSpec(engine="exact")),
+])
+def test_mesh_inprocess_bit_parity(mesh_shards, name, kw, sd, spec):
+    """The mesh-sharded runtime (ONE coordinator, S in-graph shard servers
+    over stacked arenas) reproduces both the single-server run AND the
+    S-thread sharded runtime bit-for-bit — and, unlike the S-thread
+    runtime, moves exactly the single-server wire bytes (one frame per
+    event, split in-graph rather than on the wire)."""
+    from repro.core.paramspace import ParamSpace, ShardSpec
+
+    grad_fn, batch_fn, params0 = _problem()
+    sched = async_sim.make_schedule(3, 24, seed=7, hetero=0.9)
+    strat = make_strategy(name, **kw)
+    f1, h1 = run_inprocess(strat, grad_fn, params0, batch_fn,
+                           schedule=sched, lr=0.03,
+                           secondary_density=sd, secondary_spec=spec)
+    fM, hM = run_inprocess(strat, grad_fn, params0, batch_fn,
+                           schedule=sched, lr=0.03,
+                           secondary_density=sd, secondary_spec=spec,
+                           mesh_shards=mesh_shards)
+    fT, hT = run_inprocess(strat, grad_fn, params0, batch_fn,
+                           schedule=sched, lr=0.03,
+                           secondary_density=sd, secondary_spec=spec,
+                           n_shards=mesh_shards)
+    np.testing.assert_array_equal(h1.losses, hM.losses)
+    np.testing.assert_array_equal(h1.worker_ids, hM.worker_ids)
+    np.testing.assert_array_equal(h1.staleness, hM.staleness)
+    np.testing.assert_array_equal(hT.losses, hM.losses)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(fM)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(fT), jax.tree.leaves(fM)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # bytes contract: the mesh runtime speaks the SINGLE-server wire
+    # protocol — the index-range split happens in-graph, not on the wire
+    assert (hM.up_bytes, hM.down_bytes) == (h1.up_bytes, h1.down_bytes)
+    # fixed-capacity route slots never overflowed, and every shard saw
+    # every event with its static arena range
+    counters = hM.metrics["counters"]
+    assert counters["route_overflow"] == 0
+    sspec = ShardSpec.for_space(ParamSpace.from_tree(params0), mesh_shards)
+    for s in range(mesh_shards):
+        assert counters[f"shard/{s}/events"] == len(hM.losses)
+        assert counters[f"shard/{s}/arena_elems"] == sspec.sizes[s]
+
+
+def test_mesh_and_thread_sharding_are_exclusive():
+    grad_fn, batch_fn, params0 = _problem()
+    strat = make_strategy("dgs", density=0.2, momentum=0.7)
+    with pytest.raises(ValueError, match="exactly one"):
+        run_inprocess(strat, grad_fn, params0, batch_fn,
+                      schedule=np.zeros(4, np.int64), lr=0.03,
+                      n_shards=2, mesh_shards=2)
+
+
+def test_mesh_serving_not_implemented():
+    grad_fn, batch_fn, params0 = _problem()
+    strat = make_strategy("dgs", density=0.2, momentum=0.7)
+    with pytest.raises(NotImplementedError, match="mesh-sharded serving"):
+        run_inprocess(strat, grad_fn, params0, batch_fn,
+                      schedule=np.zeros(4, np.int64), lr=0.03,
+                      mesh_shards=2, n_replicas=1)

@@ -221,6 +221,169 @@ def test_sharded_frames_bit_and_byte_equal(engine, extra, mode):
                                       np.asarray(ship_single[0].indices))
 
 
+# ---------------------------------------------------------------------------
+# in-graph route kernel (DESIGN.md §14): kernels.ops.route_by_shard vs a
+# host reference built from the same ShardSpec ownership rule
+# ---------------------------------------------------------------------------
+
+def _route_case(seed: int, total: int, S: int, k: int, B: int = 1):
+    """Random ragged bounds (empty shards legal), ~20% -1 padding, and
+    INTEGER-valued float32 values so duplicate-index f32 scatter sums are
+    exact regardless of the kernel's internal reordering."""
+    rng = np.random.default_rng(seed)
+    interior = np.sort(rng.integers(0, total + 1, size=S - 1))
+    spec = ShardSpec(bounds=(0, *(int(b) for b in interior), total))
+    idx = rng.integers(0, total, size=(B, k)).astype(np.int32)
+    idx[rng.random((B, k)) < 0.2] = -1
+    vals = rng.integers(-8, 9, size=(B, k)).astype(np.float32)
+    return spec, idx, vals
+
+
+def _route_scatter(spec, ri, rv, total: int) -> np.ndarray:
+    """Scatter one message's (S, cap) route buckets back to the global
+    arena through each shard's bounds offset."""
+    dense = np.zeros(total, np.float32)
+    for s in range(spec.n_shards):
+        li, lv = np.asarray(ri[s]), np.asarray(rv[s])
+        m = li >= 0
+        if m.any():
+            size = spec.sizes[s]
+            assert li[m].min() >= 0 and li[m].max() < size
+            np.add.at(dense, spec.bounds[s] + li[m], lv[m])
+        # empty slots carry exactly zero, never residue
+        np.testing.assert_array_equal(lv[~m], 0.0)
+    return dense
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(1, 24),
+       st.integers(0, 2 ** 31))
+def test_property_route_kernel_scatter_roundtrip(total, S, k, seed):
+    """route_by_shard with cap=k (never overflows) + per-shard scatter
+    through the bounds offsets == the direct global scatter, bit-for-bit,
+    for ragged bounds, empty shards, and -1 padding."""
+    from repro.kernels import ops
+
+    spec, idx, vals = _route_case(seed, total, S, k)
+    ri, rv, ovf = ops.route_by_shard(
+        jnp.asarray(idx[0]), jnp.asarray(vals[0]),
+        bounds=spec.bounds, n_shards=S, cap=k)
+    assert int(ovf) == 0
+    ref = np.zeros(total, np.float32)
+    m = idx[0] >= 0
+    np.add.at(ref, idx[0][m], vals[0][m])
+    np.testing.assert_array_equal(_route_scatter(spec, ri, rv, total), ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 40), st.integers(1, 5), st.integers(1, 16),
+       st.integers(1, 5), st.integers(0, 2 ** 31))
+def test_property_route_batch_equals_single_calls(total, S, k, B, seed):
+    """The fused batch kernel (one flat scatter for N chunks) returns
+    exactly the per-message single-call results, overflow summed."""
+    from repro.kernels import ops
+
+    spec, idx, vals = _route_case(seed, total, S, k, B=B)
+    cap = max(1, k - 1)   # tight cap: exercise the overflow leg too
+    riB, rvB, ovfB = ops.route_by_shard_batch(
+        jnp.asarray(idx), jnp.asarray(vals),
+        bounds=spec.bounds, n_shards=S, cap=cap)
+    total_ovf = 0
+    for b in range(B):
+        ri1, rv1, ovf1 = ops.route_by_shard(
+            jnp.asarray(idx[b]), jnp.asarray(vals[b]),
+            bounds=spec.bounds, n_shards=S, cap=cap)
+        np.testing.assert_array_equal(np.asarray(riB[b]), np.asarray(ri1))
+        np.testing.assert_array_equal(np.asarray(rvB[b]), np.asarray(rv1))
+        total_ovf += int(ovf1)
+    assert int(ovfB) == total_ovf
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 40), st.integers(1, 5), st.integers(2, 20),
+       st.integers(1, 4), st.integers(0, 2 ** 31))
+def test_property_route_tight_cap_counts_and_keeps_prefix(total, S, k, cap,
+                                                          seed):
+    """With cap below a shard's bucket count the kernel reports EXACTLY
+    sum_s max(0, count_s - cap) dropped entries, and the stable sort means
+    each shard keeps its first `cap` entries in original message order."""
+    from repro.kernels import ops
+
+    spec, idx, vals = _route_case(seed, total, S, k)
+    ri, rv, ovf = ops.route_by_shard(
+        jnp.asarray(idx[0]), jnp.asarray(vals[0]),
+        bounds=spec.bounds, n_shards=S, cap=cap)
+    real = idx[0] >= 0
+    owner = spec.owner_of(idx[0][real])
+    counts = np.bincount(owner, minlength=S)
+    assert int(ovf) == int(np.maximum(counts - cap, 0).sum())
+    for s in range(S):
+        kept = min(int(counts[s]), cap)
+        mine = idx[0][real][owner == s][:kept] - spec.bounds[s]
+        li = np.asarray(ri[s])
+        np.testing.assert_array_equal(li[:kept], mine.astype(np.int32))
+        assert (li[kept:] == -1).all()
+
+
+def test_route_kernel_index_width_invariant():
+    """int64 and int32 host indices produce identical buckets (jnp maps
+    both onto the kernel's int32 index path)."""
+    from repro.kernels import ops
+
+    spec, idx, vals = _route_case(5, 100, 4, 16, B=3)
+    out32 = ops.route_by_shard_batch(
+        jnp.asarray(idx.astype(np.int32)), jnp.asarray(vals),
+        bounds=spec.bounds, n_shards=4, cap=16)
+    out64 = ops.route_by_shard_batch(
+        jnp.asarray(idx.astype(np.int64)), jnp.asarray(vals),
+        bounds=spec.bounds, n_shards=4, cap=16)
+    for a, b in zip(out32, out64):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mesh_collective_equals_fallback_bitwise():
+    """Pin shard_exchange_batch's two legs against each other: the
+    all_to_all collective over 4 forced host devices must be bit-identical
+    to the single-device swapaxes permutation (runs in a subprocess so the
+    forced device count cannot leak into this process's jax runtime)."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    import repro
+
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.paramspace import ParamSpace, ShardSpec
+from repro.core import distributed
+assert len(jax.devices()) >= 4, jax.devices()
+params = {"a": jnp.zeros((300,)), "b": jnp.zeros((477,)),
+          "c": jnp.zeros((223,))}
+space = ParamSpace.from_tree(params)
+spec = ShardSpec.for_space(space, 4)
+rng = np.random.default_rng(0)
+idx = rng.integers(0, space.total, size=(5, 37)).astype(np.int32)
+idx[rng.random((5, 37)) < 0.2] = -1
+vals = rng.integers(-8, 9, size=(5, 37)).astype(np.float32)
+mesh = distributed.shard_exchange_batch(
+    spec, jnp.asarray(idx), jnp.asarray(vals), use_mesh=True)
+flat = distributed.shard_exchange_batch(
+    spec, jnp.asarray(idx), jnp.asarray(vals), use_mesh=False)
+for a, b in zip(mesh, flat):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("MESH_PARITY_OK")
+"""
+    root = pathlib.Path(next(iter(repro.__path__))).parent
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=str(root))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "MESH_PARITY_OK" in out.stdout
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 6), st.integers(1, 5), st.integers(0, 2 ** 31),
        st.sampled_from(MODES))

@@ -50,6 +50,22 @@ def test_update_batched_equals_sequential_scalars():
     assert d["update_mag_hist"]["counts"][0] == 1
 
 
+def test_route_overflow_accumulates_and_drains():
+    """The overflow counter sums scalar and batched contributions across
+    updates and drains as a plain int — zero when never fed."""
+    ms = M.init(2)
+    assert M.drain(ms)["route_overflow"] == 0
+    ms = M.update(ms, jnp.int32(0), jnp.int32(0), jnp.int32(1),
+                  jnp.int32(1), jnp.float32(1.0), overflow=jnp.int32(3))
+    ms = M.update(ms, jnp.asarray([0, 1], jnp.int32),
+                  jnp.asarray([0, 0], jnp.int32),
+                  jnp.asarray([1, 1], jnp.int32),
+                  jnp.asarray([1, 1], jnp.int32),
+                  jnp.asarray([1.0, 1.0], jnp.float32),
+                  overflow=jnp.asarray([2, 5], jnp.int32))
+    assert M.drain(ms)["route_overflow"] == 10
+
+
 def test_summarize_log2_is_the_host_twin():
     vals = [0, 1, 5, 100, 1000, 1000, 2 ** 20]
     ms = M.init(1)
